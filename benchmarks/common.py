@@ -1,0 +1,49 @@
+"""Shared benchmark utilities + the hardware cost model used to translate
+counted bytes into seconds for channels this CPU container cannot measure.
+
+Measured quantities (CPU wall time): sampling, online splitting, forward/
+backward compute. Modeled quantities (counted bytes x channel bandwidth):
+feature loading over host link and peer link, shuffle traffic. The paper's
+testbed constants (V100 + PCIe 3.0 x16 + NVLink) are used for the epoch-time
+reproduction; the TPU v5e constants drive the roofline tables.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+# paper testbed (§7.1): PCIe 3.0 x16 host link, NVLink peer link
+PCIE_BW = 12e9  # bytes/s effective
+NVLINK_BW = 250e9  # bytes/s effective
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timeit(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def model_load_seconds(host_rows: int, peer_rows: int, feat_dim: int) -> float:
+    b = feat_dim * 4
+    return host_rows * b / PCIE_BW + peer_rows * b / NVLINK_BW
+
+
+def model_shuffle_seconds(rows: int, hidden_dim: int) -> float:
+    return rows * hidden_dim * 4 / NVLINK_BW

@@ -1,0 +1,54 @@
+"""Per-kernel microbenchmarks: Pallas (interpret mode) vs jnp oracle.
+
+Interpret-mode wall time is NOT TPU time; the derived column reports the
+kernel's logical bytes/flops so the TPU-side roofline can be computed (one
+MXU matmul of (R x EB) @ (EB x FB) per grid step for segsum).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.kernels.edge_softmax.ops import edge_softmax_pallas
+from repro.kernels.edge_softmax.ref import edge_softmax_ref
+from repro.kernels.segsum.ops import segment_sum_pallas
+from repro.kernels.segsum.ref import segment_sum_ref
+
+
+def run() -> list[Row]:
+    rows = []
+    rng = np.random.default_rng(0)
+    E, F, N = 16384, 256, 4096
+    contrib = jnp.asarray(rng.normal(size=(E, F)), jnp.float32)
+    dst = rng.integers(0, N, size=E).astype(np.int32)
+    mask = np.ones(E, bool)
+
+    t_ref = timeit(
+        lambda: jax.block_until_ready(
+            segment_sum_ref(contrib, jnp.asarray(dst), jnp.asarray(mask), N)
+        )
+    )
+    t_pal = timeit(
+        lambda: jax.block_until_ready(segment_sum_pallas(contrib, dst, mask, N))
+    )
+    flops = 2 * E * F  # one MAC per (edge, feature)
+    rows.append(Row("kernel/segsum/jnp", t_ref * 1e6,
+                    f"E={E} F={F} N={N} flops={flops:.2e}"))
+    rows.append(Row("kernel/segsum/pallas_interpret", t_pal * 1e6,
+                    f"v5e_mxu_est={flops/197e12*1e6:.3f}us"))
+
+    H = 8
+    logits = jnp.asarray(rng.normal(size=(E, H)), jnp.float32)
+    t_ref = timeit(
+        lambda: jax.block_until_ready(
+            edge_softmax_ref(logits, jnp.asarray(dst), jnp.asarray(mask), N)
+        )
+    )
+    t_pal = timeit(
+        lambda: jax.block_until_ready(edge_softmax_pallas(logits, dst, mask, N))
+    )
+    rows.append(Row("kernel/edge_softmax/jnp", t_ref * 1e6, f"E={E} H={H}"))
+    rows.append(Row("kernel/edge_softmax/pallas_interpret", t_pal * 1e6, ""))
+    return rows

@@ -1,0 +1,82 @@
+"""Paper §7.3 'Cost of the splitting algorithm': pre-sampling epochs
+sensitivity + offline stage wall times + online splitting overhead."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.core.partition import partition_graph
+from repro.core.presample import presample
+from repro.core.splitting import build_split_plan
+from repro.graph.datasets import make_dataset
+from repro.graph.sampling import NeighborSampler
+
+FANOUTS = [15, 15, 15]
+BATCH = 512
+NUM_DEVICES = 4
+
+
+def run(dataset="orkut-s") -> list[Row]:
+    ds = make_dataset(dataset)
+    rows = []
+
+    # offline costs
+    t0 = time.perf_counter()
+    w10 = presample(ds.graph, ds.train_ids, FANOUTS, BATCH, num_epochs=10)
+    t_pre = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    part = partition_graph(
+        ds.graph, NUM_DEVICES, method="gsplit", weights=w10, seed=0
+    )
+    t_part = time.perf_counter() - t0
+    rows.append(Row(f"presample/{dataset}/10epochs", t_pre * 1e6,
+                    f"wall={t_pre:.2f}s"))
+    rows.append(Row(f"partition/{dataset}/gsplit", t_part * 1e6,
+                    f"wall={t_part:.2f}s"))
+
+    # sensitivity: 10 vs 30 epochs of pre-sampling (paper: within ~2% / 7%)
+    w30 = presample(
+        ds.graph, ds.train_ids, FANOUTS, BATCH, num_epochs=30, seed=5
+    )
+    part30 = partition_graph(
+        ds.graph, NUM_DEVICES, method="gsplit", weights=w30, seed=0
+    )
+    sampler = NeighborSampler(ds.graph, ds.train_ids, FANOUTS, BATCH, seed=3)
+    stats = {10: [], 30: []}
+    for i, targets in enumerate(sampler.epoch_batches()):
+        if i >= 4:
+            break
+        mb = sampler.sample(targets)
+        for ep, p in ((10, part), (30, part30)):
+            plan = build_split_plan(mb, p.assignment, NUM_DEVICES)
+            stats[ep].append((plan.load_imbalance(), plan.cross_edge_fraction()))
+    m10 = np.mean(stats[10], axis=0)
+    m30 = np.mean(stats[30], axis=0)
+    rows.append(
+        Row(
+            f"presample/{dataset}/sensitivity",
+            0.0,
+            f"imb10={m10[0]:.3f} imb30={m30[0]:.3f} "
+            f"cross10={m10[1]:.1%} cross30={m30[1]:.1%} "
+            f"d_imb={abs(m10[0]-m30[0]):.3f} d_cross={abs(m10[1]-m30[1]):.3%}",
+        )
+    )
+
+    # online splitting cost per iteration (must be negligible, §7.2)
+    targets = next(iter(sampler.epoch_batches()))
+    mb = sampler.sample(targets)
+    t_split = timeit(
+        lambda: build_split_plan(mb, part.assignment, NUM_DEVICES), iters=5
+    )
+    t_sample = timeit(lambda: sampler.sample(targets), iters=5)
+    rows.append(
+        Row(
+            f"online_split/{dataset}",
+            t_split * 1e6,
+            f"split={t_split*1e3:.1f}ms sample={t_sample*1e3:.1f}ms "
+            f"ratio={t_split/t_sample:.2f}",
+        )
+    )
+    return rows

@@ -1,0 +1,52 @@
+"""Roofline table from the dry-run JSON records (deliverable g).
+
+Reads results/dryrun/*.json and emits one row per (arch x shape x mesh):
+the three terms in seconds, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs,
+and peak memory per device.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Row
+
+
+def load_records(out_dir="results/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def baseline_single_pod(recs):
+    return [r for r in recs if r["mesh"] == "16x16" and not r.get("opts")]
+
+
+def run() -> list[Row]:
+    rows = []
+    recs = load_records()
+    if not recs:
+        return [Row("roofline/missing", 0.0,
+                    "run `python -m repro.launch.dryrun --all` first")]
+    for r in recs:
+        if r["mesh"] != "16x16":
+            continue  # multi-pod sweep is the sharding proof (fast accounting)
+        rf = r["roofline"]
+        dom_t = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+        tag = "/" + r["opts"].replace(",", "+") if r.get("opts") else ""
+        rows.append(
+            Row(
+                f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}{tag}",
+                dom_t * 1e6,
+                f"compute={rf['t_compute_s']:.3e}s "
+                f"memory={rf['t_memory_s']:.3e}s "
+                f"collective={rf['t_collective_s']:.3e}s "
+                f"bottleneck={rf['bottleneck']} "
+                f"useful_ratio={rf['useful_flops_ratio']:.3f} "
+                f"peak={r['memory']['peak_gib']:.2f}GiB",
+            )
+        )
+    return rows

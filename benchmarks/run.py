@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Select subsets with
+``python -m benchmarks.run [table1] [table3] [fig5] [presample] [kernels]
+[transformer] [roofline]``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+BENCHES = {
+    "table1": ("benchmarks.table1_redundancy", "Table 1 — micro/mini redundancy"),
+    "fig5": ("benchmarks.fig5_partition_quality", "Fig. 5 — partitioner quality"),
+    "presample": ("benchmarks.presample_cost", "§7.3 — splitting algorithm cost"),
+    "table3": ("benchmarks.table3_epoch_time", "Table 3 — epoch time breakdown"),
+    "kernels": ("benchmarks.kernel_bench", "Pallas kernels vs oracle"),
+    "transformer": ("benchmarks.transformer_bench", "Assigned archs (reduced)"),
+    "roofline": ("benchmarks.roofline_report", "Roofline from dry-run records"),
+}
+
+
+def main() -> None:
+    import importlib
+
+    names = [a for a in sys.argv[1:] if a in BENCHES] or list(BENCHES)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        mod_name, title = BENCHES[name]
+        t0 = time.perf_counter()
+        try:
+            mod = importlib.import_module(mod_name)
+            for row in mod.run():
+                print(row.csv(), flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"{name}/FAILED,0.0,{e!r}", flush=True)
+        print(
+            f"# {name} ({title}) done in {time.perf_counter()-t0:.1f}s",
+            flush=True,
+        )
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark(s) failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

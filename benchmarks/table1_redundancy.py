@@ -1,0 +1,51 @@
+"""Paper Table 1: redundant computation and data loading of micro-batching.
+
+For each (scaled) dataset: one epoch sampled as 4 micro-batches of B/4
+("Micro") vs one mini-batch of B ("Mini"); report edge-compute and
+feature-load ratios. Paper values at full scale: compute 1.0-1.2x,
+loads 1.2-2.5x.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.graph.datasets import make_dataset
+from repro.graph.sampling import NeighborSampler
+
+DATASETS = ["orkut-s", "papers-s", "friendster-s"]
+NUM_DEVICES = 4
+FANOUTS = [15, 15, 15]
+BATCH = 512
+
+
+def run() -> list[Row]:
+    rows = []
+    for name in DATASETS:
+        ds = make_dataset(name)
+        s = NeighborSampler(ds.graph, ds.train_ids, FANOUTS, BATCH, seed=0)
+        micro_edges = micro_loads = mini_edges = mini_loads = 0
+        for targets in s.epoch_batches():
+            mini = s.sample(targets)
+            mini_edges += mini.total_edges()
+            mini_loads += mini.input_ids.shape[0]
+            for m in s.sample_micro(targets, NUM_DEVICES):
+                micro_edges += m.total_edges()
+                micro_loads += m.input_ids.shape[0]
+        rows.append(
+            Row(
+                f"table1/{name}/edges",
+                0.0,
+                f"micro={micro_edges} mini={mini_edges} "
+                f"ratio={micro_edges / mini_edges:.2f}x",
+            )
+        )
+        rows.append(
+            Row(
+                f"table1/{name}/feature_loads",
+                0.0,
+                f"micro={micro_loads} mini={mini_loads} "
+                f"ratio={micro_loads / mini_loads:.2f}x",
+            )
+        )
+    return rows

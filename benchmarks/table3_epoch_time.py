@@ -1,0 +1,122 @@
+"""Paper Table 3: epoch time breakdown (S / L / FB) per system.
+
+Systems (paper §7.1 baselines, all sharing our kernels):
+  dgl     -- data parallel, no cache (DGL can't cache graphs this size)
+  quiver  -- data parallel + distributed feature cache
+  p3      -- push-pull hybrid (P3*): no bottom-layer feature loads when
+             cached, but shuffles bottom-layer partial activations for every
+             micro-batch edge
+  edge    -- split parallelism with the Edge (no-presample) partitioner
+  gsplit  -- split parallelism with the presample-weighted partitioner
+
+S and FB are measured CPU wall times of the actual jitted computation (sim
+mode); L and shuffle costs are modeled from *counted* rows via the paper's
+testbed bandwidths (benchmarks/common.py) since this container has no
+PCIe/NVLink to measure. Ratios between systems are the reproduction target,
+not absolute seconds.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    Row,
+    model_load_seconds,
+    model_shuffle_seconds,
+)
+from repro.graph.datasets import make_dataset
+from repro.models.gnn import GNNSpec
+from repro.train.trainer import TrainConfig, Trainer
+
+NUM_DEVICES = 4
+FANOUTS = (10, 10, 10)
+BATCH = 256
+HIDDEN = 64  # CPU-scale stand-in for the paper's 256
+MAX_ITERS = 3
+
+SYSTEMS = {
+    "dgl": dict(mode="dp", cache_mode="none"),
+    "quiver": dict(mode="dp", cache_mode="distributed"),
+    "p3": dict(mode="pushpull", cache_mode="none"),
+    "edge": dict(mode="split", partition_method="edge", cache_mode="none"),
+    "gsplit": dict(
+        mode="split", partition_method="gsplit", cache_mode="partitioned"
+    ),
+}
+
+
+# Paper-regime per-edge kernel rates (V100, calibrated from Table 3: DGL
+# Orkut FB 9.2s / ~926M edge-computations -> ~1e-8 s/edge for SAGE; GAT FB
+# is ~2x). All systems share the same kernels (paper §7.1), so one rate per
+# model applies across systems.
+V100_EDGE_RATE = {"sage": 1.0e-8, "gat": 2.0e-8, "gcn": 0.8e-8}
+
+
+def run(models=("sage", "gat"), dataset="orkut-s") -> list[Row]:
+    ds = make_dataset(dataset)
+    cache_cap = ds.graph.num_nodes // (2 * NUM_DEVICES)  # ~50% cacheable
+    rows = []
+    for model in models:
+        spec = GNNSpec(
+            model=model, in_dim=ds.spec.feat_dim, hidden_dim=HIDDEN,
+            out_dim=ds.spec.num_classes, num_layers=3, num_heads=4,
+        )
+        stats = {}
+        for sys_name, overrides in SYSTEMS.items():
+            cfg = TrainConfig(
+                num_devices=NUM_DEVICES, fanouts=FANOUTS, batch_size=BATCH,
+                presample_epochs=2, seed=0,
+                cache_capacity_per_device=cache_cap,
+                **overrides,
+            )
+            tr = Trainer(ds, spec, cfg)
+            stats[sys_name] = (tr, tr.train_epoch(max_iters=MAX_ITERS).totals())
+
+        # one shared per-edge compute rate, measured from the DGL run (all
+        # systems use the same layer kernels, paper §7.1); this removes the
+        # sim-mode padding/vmap fixed overheads from the cross-system model
+        dgl_st = stats["dgl"][1]
+        rate_cpu = dgl_st["t_compute"] / max(dgl_st["computed_edges"], 1)
+
+        for sys_name, (tr, st) in stats.items():
+            t_sample = st["t_sample"] + st["t_split"]
+            if tr.cache is not None:
+                host = st.get("load_host_miss", 0)
+                peer = st.get("load_remote_hit", 0)
+            else:
+                host, peer = st["loaded_rows"], 0
+            t_load = model_load_seconds(host, peer, ds.spec.feat_dim)
+
+            def fb_for(rate):
+                # devices run concurrently; the busiest split gates the step
+                t = rate * st["busiest_edges"] + model_shuffle_seconds(
+                    st["shuffle_rows"], HIDDEN
+                )
+                if tr.cfg.mode == "pushpull":
+                    # P3 pushes bottom-layer partial activations of every
+                    # micro-batch to its owner (paper §2.2)
+                    t += model_shuffle_seconds(
+                        int(st["computed_edges"] * (NUM_DEVICES - 1)
+                            / NUM_DEVICES),
+                        HIDDEN,
+                    )
+                return t
+
+            t_fb = fb_for(rate_cpu)
+            total = t_sample + t_load + t_fb
+            # paper-regime: V100 kernel rate makes loading vs compute weights
+            # match the paper's testbed (DESIGN.md §3)
+            t_fb_v = fb_for(V100_EDGE_RATE.get(model, 1e-8))
+            total_v = t_load + t_fb_v  # GPU sampling ~ small, omitted
+            rows.append(
+                Row(
+                    f"table3/{dataset}/{model}/{sys_name}",
+                    total * 1e6 / MAX_ITERS,
+                    f"S={t_sample:.3f}s L={t_load:.4f}s FB={t_fb:.3f}s "
+                    f"total={total:.3f}s | v100_regime: FB={t_fb_v:.4f}s "
+                    f"total={total_v:.4f}s | loaded={st['loaded_rows']:.0f} "
+                    f"shuffled={st['shuffle_rows']:.0f} "
+                    f"busiest_edges={st['busiest_edges']:.0f}",
+                )
+            )
+    return rows

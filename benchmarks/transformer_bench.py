@@ -1,0 +1,57 @@
+"""CPU microbenchmark: one reduced train step + one decode step per assigned
+architecture (sanity that all ten families execute, with relative costs)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, timeit
+from repro.configs import get_arch, list_archs
+from repro.models.transformer.model import (
+    init_caches,
+    init_params,
+    make_decode_step,
+    make_train_step,
+)
+from repro.train.optimizer import adamw
+
+B, S = 2, 64
+
+
+def run() -> list[Row]:
+    rows = []
+    for arch in list_archs():
+        full = get_arch(arch)
+        cfg = full.reduced(attn_window=16 if full.attn_window else None)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        key = jax.random.PRNGKey(1)
+        if cfg.num_codebooks:
+            batch = {"tokens": jax.random.randint(
+                key, (B, S, cfg.num_codebooks), 0, cfg.vocab_size)}
+        elif cfg.num_patches:
+            batch = {
+                "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+                "patches": jnp.zeros((B, cfg.num_patches, cfg.d_model)),
+            }
+        else:
+            batch = {"tokens": jax.random.randint(key, (B, S), 0,
+                                                  cfg.vocab_size)}
+        opt = adamw(1e-3)
+        step = jax.jit(make_train_step(cfg, opt))
+        ostate = opt.init(params)
+        t_train = timeit(
+            lambda: jax.block_until_ready(step(params, ostate, batch)[2]["loss"])
+        )
+        decode = jax.jit(make_decode_step(cfg))
+        caches = init_caches(cfg, B, 128)
+        tok = (jnp.zeros((B, 1, cfg.num_codebooks), jnp.int32)
+               if cfg.num_codebooks else jnp.zeros((B, 1), jnp.int32))
+        t_dec = timeit(
+            lambda: jax.block_until_ready(
+                decode(params, {"tokens": tok}, jnp.int32(3), caches)[0]
+            )
+        )
+        rows.append(Row(f"transformer/{arch}/train_step", t_train * 1e6,
+                        f"reduced B={B} S={S}"))
+        rows.append(Row(f"transformer/{arch}/decode_step", t_dec * 1e6, ""))
+    return rows

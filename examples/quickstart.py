@@ -1,0 +1,44 @@
+"""Quickstart: split-parallel GNN training in ~30 lines of public API.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.graph.datasets import make_dataset
+from repro.models.gnn import GNNSpec
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main() -> None:
+    ds = make_dataset("tiny")
+    spec = GNNSpec(
+        model="sage",
+        in_dim=ds.spec.feat_dim,
+        hidden_dim=64,
+        out_dim=ds.spec.num_classes,
+        num_layers=2,
+    )
+    cfg = TrainConfig(
+        mode="split",  # the paper's split parallelism
+        num_devices=4,
+        fanouts=(10, 10),
+        batch_size=64,
+        partition_method="gsplit",  # presample-weighted min-cut (§5)
+        presample_epochs=5,
+        lr=5e-3,
+    )
+    trainer = Trainer(ds, spec, cfg)
+    print(
+        f"offline: presample={trainer.t_presample:.2f}s "
+        f"partition={trainer.t_partition:.2f}s"
+    )
+    for epoch in range(5):
+        st = trainer.train_epoch().totals()
+        print(
+            f"epoch {epoch}: loss={st['loss']:.4f} acc={st['accuracy']:.2%} "
+            f"loaded={st['loaded_rows']:.0f} rows "
+            f"shuffled={st['shuffle_rows']:.0f} rows "
+            f"imbalance={st['load_imbalance']:.3f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end driver: train a 3-layer GraphSAGE on the scaled Orkut mirror
+for a few hundred steps with split parallelism, checkpointing, and a
+validation of the paper's dedup claim against a data-parallel run.
+
+    PYTHONPATH=src python examples/train_gnn_e2e.py [--steps 200]
+"""
+import argparse
+import time
+
+from repro.graph.datasets import make_dataset
+from repro.models.gnn import GNNSpec
+from repro.train.checkpoint import save_checkpoint
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--dataset", default="orkut-s")
+    ap.add_argument("--ckpt", default="/tmp/gsplit_ckpt")
+    args = ap.parse_args()
+
+    ds = make_dataset(args.dataset)
+    spec = GNNSpec(
+        model="sage",
+        in_dim=ds.spec.feat_dim,
+        hidden_dim=128,
+        out_dim=ds.spec.num_classes,
+        num_layers=3,
+    )
+
+    base = dict(
+        num_devices=4, fanouts=(10, 10, 10),
+        batch_size=min(256, len(ds.train_ids)),
+        presample_epochs=5, lr=2e-3,
+        cache_capacity_per_device=ds.graph.num_nodes // 8,
+    )
+    split_tr = Trainer(
+        ds, spec, TrainConfig(mode="split", cache_mode="partitioned", **base)
+    )
+    dp_tr = Trainer(ds, spec, TrainConfig(mode="dp", cache_mode="distributed",
+                                          **base))
+
+    steps_done, t0 = 0, time.perf_counter()
+    split_loaded = dp_loaded = 0
+    losses = []
+    while steps_done < args.steps:
+        for targets in split_tr.sampler.epoch_batches():
+            if steps_done >= args.steps:
+                break
+            st = split_tr.train_iter(targets)
+            dp_st = dp_tr.train_iter(targets)
+            split_loaded += st.loaded_rows
+            dp_loaded += dp_st.loaded_rows
+            losses.append(st.loss)
+            steps_done += 1
+            if steps_done % 25 == 0:
+                print(
+                    f"step {steps_done:4d} loss={st.loss:.4f} "
+                    f"acc={st.accuracy:.2%} "
+                    f"split_loads={split_loaded} dp_loads={dp_loaded} "
+                    f"({time.perf_counter()-t0:.0f}s)"
+                )
+
+    save_checkpoint(args.ckpt, split_tr.params, step=steps_done)
+    print(f"checkpoint written to {args.ckpt}")
+    first = sum(losses[:20]) / 20
+    last = sum(losses[-20:]) / 20
+    print(f"loss first20={first:.4f} last20={last:.4f}")
+    assert last < first, "training must reduce loss"
+    ratio = dp_loaded / max(split_loaded, 1)
+    print(f"dedup: data parallelism loaded {ratio:.2f}x more feature rows")
+    assert ratio > 1.0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Assigned architecture configs. Importing this package populates the
+registry used by ``repro.models.transformer.config.get_arch``."""
+from repro.configs import (  # noqa: F401
+    hymba_1p5b,
+    smollm_135m,
+    deepseek_v2_236b,
+    deepseek_v2_lite_16b,
+    phi3_mini_3p8b,
+    musicgen_medium,
+    granite_20b,
+    gemma_7b,
+    mamba2_2p7b,
+    llava_next_mistral_7b,
+)
+from repro.models.transformer.config import get_arch, list_archs  # noqa: F401

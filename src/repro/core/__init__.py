@@ -1,0 +1,25 @@
+"""Split parallelism core: presample -> partition -> online split -> shuffle."""
+from repro.core.presample import PresampleWeights, presample
+from repro.core.partition import Partition, partition_graph
+from repro.core.splitting import (
+    SplitPlan,
+    LayerPlan,
+    build_split_plan,
+    build_dp_plan,
+)
+from repro.core.shuffle import sim_shuffle, spmd_shuffle, segment_mean, segment_sum
+
+__all__ = [
+    "PresampleWeights",
+    "presample",
+    "Partition",
+    "partition_graph",
+    "SplitPlan",
+    "LayerPlan",
+    "build_split_plan",
+    "build_dp_plan",
+    "sim_shuffle",
+    "spmd_shuffle",
+    "segment_mean",
+    "segment_sum",
+]

@@ -1,0 +1,62 @@
+"""Offline pre-sampling stage (paper §5, "Finding the global partitioning
+function").
+
+Runs the *same* sampling algorithm used during training for a fixed number of
+epochs and accumulates
+
+  ``k_v`` -- number of times vertex ``v`` appears at a layer ``l > 0``
+             (i.e. in any non-input frontier: it will be sampled *and* its
+             hidden feature computed there), and
+  ``k_e`` -- number of times edge ``e`` is sampled, across all layers.
+
+The weighted graph ``G_w`` has ``w_V(v) = k_v / N`` and ``w_E(e) = k_e / N``
+with ``N`` the number of pre-sampling epochs. The paper finds 10 epochs
+sufficient (§7.3); that is our default.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+from repro.graph.sampling import NeighborSampler
+
+
+@dataclass
+class PresampleWeights:
+    """Weighted graph G_w from the pre-sampling stage."""
+
+    vertex_weight: np.ndarray  # (num_nodes,) float64 = k_v / N
+    edge_weight: np.ndarray  # (num_edges,) float64 = k_e / N, CSR edge order
+    num_epochs: int
+
+    @property
+    def total_load(self) -> float:
+        return float(self.vertex_weight.sum())
+
+
+def presample(
+    graph: CSRGraph,
+    train_ids: np.ndarray,
+    fanouts: list[int],
+    batch_size: int,
+    num_epochs: int = 10,
+    seed: int = 0,
+) -> PresampleWeights:
+    k_v = np.zeros(graph.num_nodes, dtype=np.int64)
+    k_e = np.zeros(graph.num_edges, dtype=np.int64)
+    sampler = NeighborSampler(graph, train_ids, fanouts, batch_size, seed=seed)
+    for _ in range(num_epochs):
+        for targets in sampler.epoch_batches():
+            mb = sampler.sample(targets)
+            # layers l > 0 are all non-input frontiers: frontiers[0..L-1]
+            for frontier in mb.frontiers[:-1]:
+                np.add.at(k_v, frontier, 1)
+            for layer in mb.layers:
+                eids = layer.edge_id[layer.edge_id >= 0]
+                np.add.at(k_e, eids, 1)
+    n = float(num_epochs)
+    return PresampleWeights(
+        vertex_weight=k_v / n, edge_weight=k_e / n, num_epochs=num_epochs
+    )

@@ -1,0 +1,78 @@
+"""Device-side shuffle primitives (the ``shuffle`` of Algorithm 2).
+
+Two execution modes with identical math:
+
+  * ``sim``  -- single-device simulation: tensors carry a leading device axis
+    ``P``; the all-to-all is a transpose of the (owner, needer) axes. Used by
+    the CPU tests/benchmarks to validate split parallelism numerically.
+  * ``spmd`` -- `shard_map` over a mesh axis: each shard holds its ``(N, F)``
+    row block and the all-to-all is ``jax.lax.all_to_all`` over the axis. Used
+    by the dry-run/launcher. Gradients flow through both (all_to_all is its
+    own transpose).
+
+The mixed-frontier buffer is ``concat([local rows, recv rows])``; padding recv
+rows are never addressed by ``edge_src`` so their values are irrelevant (and
+receive zero cotangent in the backward pass).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sim_shuffle(h: jnp.ndarray, send_idx: jnp.ndarray) -> jnp.ndarray:
+    """Simulated all-to-all shuffle.
+
+    h        -- (P, N, F) local row blocks at the source depth
+    send_idx -- (P, P, S) gather rows: [owner q, needer p, slot]
+    returns  -- (P, N + P*S, F) mixed buffers per device
+    """
+    P, N, F = h.shape
+    S = send_idx.shape[-1]
+    if S == 0:
+        return h
+    # send[q, p, s, :] = h[q, send_idx[q, p, s], :]
+    send = jnp.take_along_axis(
+        h[:, None, :, :], send_idx[:, :, :, None], axis=2
+    )  # (P, P, S, F) via broadcast of the needer axis
+    recv = jnp.swapaxes(send, 0, 1)  # all-to-all == transpose in sim mode
+    mixed = jnp.concatenate([h, recv.reshape(P, P * S, F)], axis=1)
+    return mixed
+
+
+def spmd_shuffle(
+    h_local: jnp.ndarray, send_idx_local: jnp.ndarray, axis_name: str
+) -> jnp.ndarray:
+    """shard_map-mode shuffle (runs inside a `shard_map` body).
+
+    h_local        -- (N, F) this device's row block
+    send_idx_local -- (P, S) rows to send to each peer
+    returns        -- (N + P*S, F) mixed buffer
+    """
+    P, S = send_idx_local.shape
+    if S == 0:
+        return h_local
+    send = h_local[send_idx_local]  # (P, S, F)
+    recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0)
+    # all_to_all with split/concat 0 yields (P, S, F): recv[q] = peer q's block
+    return jnp.concatenate([h_local, recv.reshape(P * S, -1)], axis=0)
+
+
+def segment_mean(
+    contrib: jnp.ndarray, dst: jnp.ndarray, mask: jnp.ndarray, num_out: int
+) -> jnp.ndarray:
+    """Masked segment mean over edge contributions (pure-jnp path).
+
+    contrib -- (E, F) per-edge messages, dst -- (E,) rows, mask -- (E,) valid.
+    """
+    w = mask.astype(contrib.dtype)
+    total = jax.ops.segment_sum(contrib * w[:, None], dst, num_segments=num_out)
+    count = jax.ops.segment_sum(w, dst, num_segments=num_out)
+    return total / jnp.maximum(count, 1.0)[:, None]
+
+
+def segment_sum(
+    contrib: jnp.ndarray, dst: jnp.ndarray, mask: jnp.ndarray, num_out: int
+) -> jnp.ndarray:
+    w = mask.astype(contrib.dtype)
+    return jax.ops.segment_sum(contrib * w[:, None], dst, num_segments=num_out)

@@ -1,0 +1,385 @@
+"""Online mini-batch splitting (paper §4/§5) and shuffle-index construction.
+
+Given a sampled mini-batch and the global partitioning function ``f_G``, the
+online splitter maps every sampled vertex to its split in O(1) (a table
+lookup — embarrassingly parallel) and builds, per GNN layer, the *shuffle
+index*: gather/scatter indices that let devices exchange exactly the hidden
+features that cross split boundaries (all-to-all), once per layer, in both
+sampling and training (the index is built once and reused, §4).
+
+Device-facing layout (static shapes; see DESIGN.md §3 for the TPU adaptation
+of NCCL's variable-size all-to-allv):
+
+  * depth ``i`` = distance from the targets: ``0`` = targets (top),
+    ``L`` = input vertices (bottom). ``h[i]`` are the activations at depth
+    ``i``; training runs ``i = L -> 0``.
+  * per depth, each device owns a padded row block ``(N_i, F)`` holding the
+    activations of its *local frontier* (vertices ``v`` with ``f_G[v] == p``).
+  * per layer transition ``i`` (depth ``i+1`` sources -> depth ``i`` dsts),
+    the *mixed frontier* buffer on device ``p`` is
+    ``concat([local rows (N_{i+1}), recv rows (P * S_i)])``; edges address it
+    via ``edge_src``. Remote rows arrive via one all-to-all of the
+    ``(P, S_i, F)`` send buffer built with ``send_idx``.
+
+Data-parallel micro-batching (the DGL baseline) is expressed in the *same*
+plan structure with all-local sources and ``S_i = 0``, so one trainer code
+path serves both paradigms.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.graph.sampling import MiniBatchSample
+
+
+def _roundup(x: int, m: int) -> int:
+    """Pad ``x`` up. ``m > 0``: next multiple of m. ``m == -1``: power-of-two
+    bucketing (min 16) — bounds the number of distinct jit signatures per
+    epoch while keeping padding waste < 2x."""
+    if x <= 0:
+        return 0
+    if m == -1:
+        p = 16
+        while p < x:
+            p <<= 1
+        return p
+    return ((x + m - 1) // m) * m
+
+
+@dataclass
+class LayerPlan:
+    """Shuffle index + aggregation index for one layer transition."""
+
+    edge_src: np.ndarray  # (P, E) int32 into the mixed buffer
+    edge_dst: np.ndarray  # (P, E) int32 into the depth-i local block
+    edge_mask: np.ndarray  # (P, E) bool
+    send_idx: np.ndarray  # (P, P, S) int32: [owner q, needer p, slot]
+    send_count: np.ndarray  # (P, P) int32 true (unpadded) send sizes
+    self_pos: np.ndarray  # (P, N_i) int32: local row at depth i+1 of each dst
+
+    @property
+    def max_send(self) -> int:
+        return int(self.send_idx.shape[-1])
+
+    def shuffle_rows(self) -> int:
+        """True number of feature rows crossing splits at this layer."""
+        return int(self.send_count.sum())
+
+
+@dataclass
+class SplitPlan:
+    """A fully-indexed split mini-batch, ready for the jitted step function."""
+
+    num_devices: int
+    num_layers: int
+    front_ids: list[np.ndarray]  # per depth: (P, N_i) int64 global ids (pad 0)
+    node_mask: list[np.ndarray]  # per depth: (P, N_i) bool
+    node_count: list[np.ndarray]  # per depth: (P,) int32
+    layers: list[LayerPlan]  # len L, index = depth of the dst side
+    stats: dict = field(default_factory=dict)
+
+    @property
+    def input_ids(self) -> np.ndarray:
+        return self.front_ids[-1]
+
+    @property
+    def input_mask(self) -> np.ndarray:
+        return self.node_mask[-1]
+
+    def loaded_feature_rows(self) -> int:
+        """Feature vectors loaded across all devices (dedup'd under split)."""
+        return int(self.node_mask[-1].sum())
+
+    def computed_edges(self) -> int:
+        return int(sum(l.edge_mask.sum() for l in self.layers))
+
+    def shuffle_rows(self) -> int:
+        return sum(l.shuffle_rows() for l in self.layers)
+
+    def padded_edge_slots(self) -> int:
+        """Edge slots actually executed by the (padded, vmapped) sim step."""
+        return int(sum(l.edge_mask.size for l in self.layers))
+
+    def busiest_edges(self) -> int:
+        """True edges on the most-loaded device (the straggler's work)."""
+        per_dev = np.zeros(self.num_devices, dtype=np.int64)
+        for l in self.layers:
+            per_dev += l.edge_mask.sum(axis=1)
+        return int(per_dev.max())
+
+    def load_imbalance(self) -> float:
+        """max/mean edges per split across layers l>0 (paper Fig. 5 metric)."""
+        per_dev = np.zeros(self.num_devices, dtype=np.int64)
+        for l in self.layers:
+            per_dev += l.edge_mask.sum(axis=1)
+        mean = per_dev.mean()
+        return float(per_dev.max() / mean) if mean > 0 else 1.0
+
+    def cross_edge_fraction(self) -> float:
+        """Cross-split edges / total edges (paper Fig. 5 metric)."""
+        total = self.computed_edges()
+        # an edge is cross-split iff its src addresses the recv region
+        cross = 0
+        for i, l in enumerate(self.layers):
+            n_local = self.front_ids[i + 1].shape[1]
+            cross += int(((l.edge_src >= n_local) & l.edge_mask).sum())
+        return cross / total if total else 0.0
+
+
+def _group_by_owner(frontier: np.ndarray, owner_of: np.ndarray, num_devices: int):
+    """Group a sorted-unique frontier by owner.
+
+    Returns (owner, local_idx, counts): per frontier position, its owning
+    device and its row within that device's local block; counts per device.
+    """
+    owner = owner_of[frontier].astype(np.int32)
+    counts = np.bincount(owner, minlength=num_devices).astype(np.int64)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    order = np.argsort(owner, kind="stable")
+    local_idx = np.empty(frontier.shape[0], dtype=np.int64)
+    local_idx[order] = np.arange(frontier.shape[0]) - np.repeat(starts, counts)
+    return owner, local_idx, counts
+
+
+def build_split_plan(
+    sample: MiniBatchSample,
+    assignment: np.ndarray,
+    num_devices: int,
+    pad_multiple: int = 8,
+) -> SplitPlan:
+    """Split a sampled mini-batch with f_G = ``assignment`` (the online part).
+
+    Everything here is O(|sample|) with vectorized numpy — the per-vertex
+    mapping is a constant-time lookup, matching the paper's requirement that
+    splitting runs on-the-fly at every iteration.
+    """
+    P = num_devices
+    L = sample.num_layers
+
+    owners: list[np.ndarray] = []
+    locals_: list[np.ndarray] = []
+    counts: list[np.ndarray] = []
+    for depth in range(L + 1):
+        o, li, c = _group_by_owner(sample.frontiers[depth], assignment, P)
+        owners.append(o)
+        locals_.append(li)
+        counts.append(c)
+
+    front_size = [
+        _roundup(max(int(c.max()), 1), pad_multiple) for c in counts
+    ]
+
+    front_ids, node_mask, node_count = [], [], []
+    for depth in range(L + 1):
+        N = front_size[depth]
+        ids = np.zeros((P, N), dtype=np.int64)
+        mask = np.zeros((P, N), dtype=bool)
+        fr = sample.frontiers[depth]
+        ids[owners[depth], locals_[depth]] = fr
+        mask[owners[depth], locals_[depth]] = True
+        front_ids.append(ids)
+        node_mask.append(mask)
+        node_count.append(counts[depth].astype(np.int32))
+
+    def pos_of(depth: int, verts: np.ndarray):
+        """(owner, local_idx) of global ids ``verts`` within depth's frontier."""
+        j = np.searchsorted(sample.frontiers[depth], verts)
+        return owners[depth][j], locals_[depth][j]
+
+    layer_plans: list[LayerPlan] = []
+    for i in range(L):
+        layer = sample.layers[i]
+        dst_owner, dst_local = pos_of(i, layer.dst)
+        src_owner, src_local = pos_of(i + 1, layer.src)
+        n_local = front_size[i + 1]
+
+        # ---- build send lists: unique (owner q, needer p, vertex) ----------
+        remote = src_owner != dst_owner
+        r_q = src_owner[remote].astype(np.int64)
+        r_p = dst_owner[remote].astype(np.int64)
+        r_v = layer.src[remote]
+        key = (r_q * P + r_p) * (sample.frontiers[i + 1][-1] + 1 if r_v.size else 1) + r_v
+        uniq_key, inv = np.unique(key, return_inverse=True)
+        # slot of each unique row within its (q, p) group
+        uq = uniq_key // (sample.frontiers[i + 1][-1] + 1 if r_v.size else 1)
+        u_q = (uq // P).astype(np.int64)
+        u_p = (uq % P).astype(np.int64)
+        pair = u_q * P + u_p
+        pair_counts = np.bincount(pair, minlength=P * P)
+        pair_starts = np.concatenate([[0], np.cumsum(pair_counts)[:-1]])
+        slot = np.arange(uniq_key.shape[0]) - pair_starts[pair]  # uniq sorted by key
+        S = max(int(pair_counts.max(initial=0)), 0)
+        S = _roundup(S, pad_multiple) if S else 0
+
+        send_idx = np.zeros((P, P, max(S, 1)), dtype=np.int32)[:, :, :S]
+        send_count = pair_counts.reshape(P, P).astype(np.int32)
+        if uniq_key.size:
+            # local row (on owner q) of each unique sent vertex
+            u_v = uniq_key % (sample.frontiers[i + 1][-1] + 1)
+            _, u_local = pos_of(i + 1, u_v)
+            send_idx[u_q, u_p, slot] = u_local.astype(np.int32)
+
+        # ---- edge source positions in the mixed buffer ---------------------
+        src_pos = src_local.astype(np.int64).copy()
+        if remote.any():
+            recv_slot = slot[inv]  # slot of each remote edge's vertex
+            src_pos[remote] = n_local + r_q * S + recv_slot
+        E = _roundup(max(layer.num_edges, 1), pad_multiple)
+        edge_src = np.zeros((P, E), dtype=np.int32)
+        edge_dst = np.zeros((P, E), dtype=np.int32)
+        edge_mask = np.zeros((P, E), dtype=bool)
+        # pack edges per destination device
+        e_owner = dst_owner.astype(np.int64)
+        e_counts = np.bincount(e_owner, minlength=P)
+        e_starts = np.concatenate([[0], np.cumsum(e_counts)[:-1]])
+        order = np.argsort(e_owner, kind="stable")
+        within = np.arange(layer.num_edges) - np.repeat(e_starts, e_counts)
+        edge_src[e_owner[order], within] = src_pos[order].astype(np.int32)
+        edge_dst[e_owner[order], within] = dst_local[order].astype(np.int32)
+        edge_mask[e_owner[order], within] = True
+        E_max = max(int(e_counts.max(initial=0)), 1)
+        E_pad = _roundup(E_max, pad_multiple)
+        edge_src = edge_src[:, :E_pad]
+        edge_dst = edge_dst[:, :E_pad]
+        edge_mask = edge_mask[:, :E_pad]
+
+        # ---- self positions: row of each depth-i vertex at depth i+1 -------
+        fr = sample.frontiers[i]
+        _, self_local = pos_of(i + 1, fr)  # same owner by construction
+        self_pos = np.zeros((P, front_size[i]), dtype=np.int32)
+        self_pos[owners[i], locals_[i]] = self_local.astype(np.int32)
+
+        layer_plans.append(
+            LayerPlan(
+                edge_src=edge_src,
+                edge_dst=edge_dst,
+                edge_mask=edge_mask,
+                send_idx=send_idx,
+                send_count=send_count,
+                self_pos=self_pos,
+            )
+        )
+
+    plan = SplitPlan(
+        num_devices=P,
+        num_layers=L,
+        front_ids=front_ids,
+        node_mask=node_mask,
+        node_count=node_count,
+        layers=layer_plans,
+    )
+    plan.stats = {
+        "loaded_rows": plan.loaded_feature_rows(),
+        "edges": plan.computed_edges(),
+        "shuffle_rows": plan.shuffle_rows(),
+    }
+    return plan
+
+
+def build_dp_plan(
+    samples: list[MiniBatchSample], pad_multiple: int = 8
+) -> SplitPlan:
+    """Stack independent micro-batches into the split-plan layout.
+
+    This is the data-parallel baseline: every source is local (redundant
+    loads/compute included), ``S_i = 0`` so no shuffles are emitted.
+    """
+    P = len(samples)
+    L = samples[0].num_layers
+    assert all(s.num_layers == L for s in samples)
+
+    front_size = [
+        _roundup(max(max(s.frontiers[d].shape[0] for s in samples), 1), pad_multiple)
+        for d in range(L + 1)
+    ]
+    front_ids, node_mask, node_count = [], [], []
+    for d in range(L + 1):
+        N = front_size[d]
+        ids = np.zeros((P, N), dtype=np.int64)
+        mask = np.zeros((P, N), dtype=bool)
+        cnt = np.zeros(P, dtype=np.int32)
+        for p, s in enumerate(samples):
+            k = s.frontiers[d].shape[0]
+            ids[p, :k] = s.frontiers[d]
+            mask[p, :k] = True
+            cnt[p] = k
+        front_ids.append(ids)
+        node_mask.append(mask)
+        node_count.append(cnt)
+
+    layer_plans = []
+    for i in range(L):
+        E = _roundup(max(max(s.layers[i].num_edges for s in samples), 1), pad_multiple)
+        edge_src = np.zeros((P, E), dtype=np.int32)
+        edge_dst = np.zeros((P, E), dtype=np.int32)
+        edge_mask = np.zeros((P, E), dtype=bool)
+        self_pos = np.zeros((P, front_size[i]), dtype=np.int32)
+        for p, s in enumerate(samples):
+            layer = s.layers[i]
+            k = layer.num_edges
+            edge_src[p, :k] = np.searchsorted(s.frontiers[i + 1], layer.src)
+            edge_dst[p, :k] = np.searchsorted(s.frontiers[i], layer.dst)
+            edge_mask[p, :k] = True
+            fr = s.frontiers[i]
+            self_pos[p, : fr.shape[0]] = np.searchsorted(s.frontiers[i + 1], fr)
+        layer_plans.append(
+            LayerPlan(
+                edge_src=edge_src,
+                edge_dst=edge_dst,
+                edge_mask=edge_mask,
+                send_idx=np.zeros((P, P, 0), dtype=np.int32),
+                send_count=np.zeros((P, P), dtype=np.int32),
+                self_pos=self_pos,
+            )
+        )
+
+    plan = SplitPlan(
+        num_devices=P,
+        num_layers=L,
+        front_ids=front_ids,
+        node_mask=node_mask,
+        node_count=node_count,
+        layers=layer_plans,
+    )
+    plan.stats = {
+        "loaded_rows": plan.loaded_feature_rows(),
+        "edges": plan.computed_edges(),
+        "shuffle_rows": 0,
+    }
+    return plan
+
+
+def repad_plan(plan: SplitPlan, hwm: dict) -> SplitPlan:
+    """Re-pad a plan's arrays up to running high-water marks (in place).
+
+    Keeps the jitted step's shape signature stable across iterations: after
+    the first few batches every plan reuses the same compiled executable
+    (padding rows/edges are masked, so numerics are unchanged).
+    """
+
+    def pad_to(a, axis, size):
+        if a.shape[axis] >= size:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, size - a.shape[axis])
+        return np.pad(a, widths)
+
+    for d in range(plan.num_layers + 1):
+        key = f"N{d}"
+        hwm[key] = max(hwm.get(key, 0), plan.front_ids[d].shape[1])
+        plan.front_ids[d] = pad_to(plan.front_ids[d], 1, hwm[key])
+        plan.node_mask[d] = pad_to(plan.node_mask[d], 1, hwm[key])
+    for i, lp in enumerate(plan.layers):
+        ek = f"E{i}"
+        hwm[ek] = max(hwm.get(ek, 0), lp.edge_src.shape[1])
+        lp.edge_src = pad_to(lp.edge_src, 1, hwm[ek])
+        lp.edge_dst = pad_to(lp.edge_dst, 1, hwm[ek])
+        lp.edge_mask = pad_to(lp.edge_mask, 1, hwm[ek])
+        sk = f"S{i}"
+        hwm[sk] = max(hwm.get(sk, 0), lp.send_idx.shape[2])
+        lp.send_idx = pad_to(lp.send_idx, 2, hwm[sk])
+        nk = f"N{i}"
+        lp.self_pos = pad_to(lp.self_pos, 1, hwm[nk])
+    return plan

@@ -1,0 +1,30 @@
+"""Graph substrate: CSR storage, synthetic datasets, neighbor sampling."""
+from repro.graph.csr import CSRGraph, build_csr, to_undirected
+from repro.graph.datasets import (
+    DatasetSpec,
+    SYNTHETIC_DATASETS,
+    make_dataset,
+    rmat_edges,
+    power_law_edges,
+)
+from repro.graph.sampling import (
+    NeighborSampler,
+    LayerSample,
+    MiniBatchSample,
+    sample_minibatch,
+)
+
+__all__ = [
+    "CSRGraph",
+    "build_csr",
+    "to_undirected",
+    "DatasetSpec",
+    "SYNTHETIC_DATASETS",
+    "make_dataset",
+    "rmat_edges",
+    "power_law_edges",
+    "NeighborSampler",
+    "LayerSample",
+    "MiniBatchSample",
+    "sample_minibatch",
+]

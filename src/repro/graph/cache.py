@@ -1,0 +1,77 @@
+"""Static GPU feature caches (paper §2.2 / §7.1 baselines).
+
+All variants rank vertices by pre-sampling access frequency (the criterion of
+GNNLab [41], used by both Quiver and GSplit in the paper) and differ in
+*placement*:
+
+  * ``partitioned``  (GSplit): top-ranked vertices of partition ``p`` cached
+    on device ``p`` — consistent with the splits, so every cache hit is local.
+  * ``distributed``  (Quiver): global top-ranked vertices sharded across
+    devices — a hit may be remote (NVLink / ICI peer fetch).
+  * ``none``         (DGL on large graphs): no cache, every load is a host miss.
+
+On this CPU container the cache changes *accounting only* (feature values are
+identical); epoch-time benchmarks combine these counts with the measured
+hardware channel costs (see benchmarks/epoch_time.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.splitting import SplitPlan
+
+
+@dataclass
+class LoadBreakdown:
+    local_hit: int
+    remote_hit: int
+    host_miss: int
+
+    @property
+    def total(self) -> int:
+        return self.local_hit + self.remote_hit + self.host_miss
+
+
+class FeatureCache:
+    def __init__(
+        self,
+        num_nodes: int,
+        num_devices: int,
+        capacity_per_device: int,
+        ranking: np.ndarray,  # e.g. presample vertex_weight (higher = cache first)
+        mode: str = "distributed",
+        partition_assignment: np.ndarray | None = None,
+    ):
+        self.num_devices = num_devices
+        self.mode = mode
+        # cached_on[v] = device holding v's features, or -1
+        self.cached_on = np.full(num_nodes, -1, dtype=np.int32)
+        if mode == "none" or capacity_per_device == 0:
+            return
+        if mode == "distributed":
+            order = np.argsort(-ranking, kind="stable")
+            top = order[: capacity_per_device * num_devices]
+            self.cached_on[top] = np.arange(top.shape[0]) % num_devices
+        elif mode == "partitioned":
+            assert partition_assignment is not None
+            for p in range(num_devices):
+                members = np.flatnonzero(partition_assignment == p)
+                order = members[np.argsort(-ranking[members], kind="stable")]
+                self.cached_on[order[:capacity_per_device]] = p
+        else:
+            raise ValueError(f"unknown cache mode {mode!r}")
+
+    def classify_plan(self, plan: SplitPlan) -> LoadBreakdown:
+        """Count where each required input-feature row would be served from."""
+        local = remote = miss = 0
+        ids = plan.front_ids[-1]
+        mask = plan.node_mask[-1]
+        for p in range(plan.num_devices):
+            v = ids[p][mask[p]]
+            where = self.cached_on[v]
+            local += int((where == p).sum())
+            remote += int(((where >= 0) & (where != p)).sum())
+            miss += int((where < 0).sum())
+        return LoadBreakdown(local_hit=local, remote_hit=remote, host_miss=miss)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Layout: one subpackage per kernel with ``kernel.py`` (pallas_call +
+BlockSpec), ``ops.py`` (jit'd wrapper incl. packing), ``ref.py`` (pure-jnp
+oracle). ``segment_ops`` is the backend dispatcher used by the GNN layers.
+"""

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the edge-softmax kernel (GAT attention normalization)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def edge_softmax_ref(
+    logits: jnp.ndarray,  # (E, H)
+    dst: jnp.ndarray,  # (E,) int32
+    mask: jnp.ndarray,  # (E,) bool
+    num_out: int,
+) -> jnp.ndarray:
+    neg = jnp.asarray(-1e30, logits.dtype)
+    masked = jnp.where(mask[:, None], logits, neg)
+    seg_max = jax.ops.segment_max(masked, dst, num_segments=num_out)
+    seg_max = jnp.maximum(seg_max, -1e30)
+    ex = jnp.exp(masked - seg_max[dst]) * mask[:, None].astype(logits.dtype)
+    denom = jax.ops.segment_sum(ex, dst, num_segments=num_out)
+    return ex / jnp.maximum(denom[dst], 1e-30)

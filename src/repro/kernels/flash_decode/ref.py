@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for single-token decode attention (GQA, masked cache)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,  # (B, H, D)
+    k: jnp.ndarray,  # (B, S, KV, D)
+    v: jnp.ndarray,  # (B, S, KV, Dv)
+    cache_len,  # () int32 — number of valid cache rows
+) -> jnp.ndarray:
+    B, S, KV, D = k.shape
+    H = q.shape[1]
+    groups = H // KV
+    kh = jnp.repeat(k, groups, axis=2)
+    vh = jnp.repeat(v, groups, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q, kh).astype(jnp.float32) / np.sqrt(D)
+    valid = jnp.arange(S) < cache_len
+    s = jnp.where(valid[None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p.astype(q.dtype), vh)

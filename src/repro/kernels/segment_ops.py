@@ -1,0 +1,44 @@
+"""Segment operations — the GNN aggregation hot-spot, with backend dispatch.
+
+``backend='jnp'``    pure-jnp (XLA scatter-add) reference path, used by default
+                     on CPU and as the oracle for the Pallas kernels.
+``backend='pallas'`` TPU Pallas kernels (see ``repro/kernels/segsum`` and
+                     ``repro/kernels/edge_softmax``) operating on the
+                     dst-block-packed layout; validated in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(contrib, dst, mask, num_out, backend="jnp"):
+    if backend == "pallas":
+        from repro.kernels.segsum import ops as segsum_ops
+
+        return segsum_ops.segment_sum_pallas(contrib, dst, mask, num_out)
+    w = mask.astype(contrib.dtype)
+    return jax.ops.segment_sum(contrib * w[:, None], dst, num_segments=num_out)
+
+
+def segment_mean(contrib, dst, mask, num_out, backend="jnp"):
+    total = segment_sum(contrib, dst, mask, num_out, backend=backend)
+    w = mask.astype(contrib.dtype)
+    count = jax.ops.segment_sum(w, dst, num_segments=num_out)
+    return total / jnp.maximum(count, 1.0)[:, None]
+
+
+def edge_softmax(logits, dst, mask, num_out, backend="jnp"):
+    """Per-destination softmax over incoming edges. logits: (E, H) -> (E, H)."""
+    if backend == "pallas":
+        from repro.kernels.edge_softmax import ops as es_ops
+
+        return es_ops.edge_softmax_pallas(logits, dst, mask, num_out)
+    neg = jnp.asarray(-1e30, logits.dtype)
+    masked = jnp.where(mask[:, None], logits, neg)
+    seg_max = jax.ops.segment_max(masked, dst, num_segments=num_out)
+    seg_max = jnp.maximum(seg_max, -1e30)  # empty segments
+    ex = jnp.exp(masked - seg_max[dst])
+    ex = ex * mask[:, None].astype(logits.dtype)
+    denom = jax.ops.segment_sum(ex, dst, num_segments=num_out)
+    return ex / jnp.maximum(denom[dst], 1e-30)

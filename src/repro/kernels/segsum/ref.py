@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the segment-sum kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(
+    contrib: jnp.ndarray,  # (E, F)
+    dst: jnp.ndarray,  # (E,) int32 in [0, num_out)
+    mask: jnp.ndarray,  # (E,) bool
+    num_out: int,
+) -> jnp.ndarray:
+    w = mask.astype(contrib.dtype)
+    return jax.ops.segment_sum(contrib * w[:, None], dst, num_segments=num_out)

@@ -1,0 +1,1 @@
+"""Distribution layer: production mesh, sharding rules, dry-run, launchers."""

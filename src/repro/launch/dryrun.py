@@ -1,0 +1,311 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first init. 512 placeholder host devices let jax.make_mesh build
+# the production meshes: (16, 16) single-pod and (2, 16, 16) multi-pod.
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input shape x mesh) combination this lowers and
+compiles the real step function (train_step / prefill_step / serve(decode)
+step) with production shardings, prints ``memory_analysis()`` /
+``cost_analysis()``, and records the roofline inputs (HLO FLOPs, bytes,
+per-collective traffic) as JSON under ``results/dryrun/``.
+
+Cost accounting: XLA:CPU's ``cost_analysis()`` is per-device and counts a
+while (scan) body once, ignoring the trip count. We therefore compile two
+additional *unrolled* reduced-depth variants (lead+2 and lead+6 layers) and
+extrapolate linearly in depth — exact because the scanned blocks are
+homogeneous. The full-depth scanned program is still compiled (the actual
+deliverable artifact: memory analysis + proof the production config lowers).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch, list_archs
+from repro.launch.input_specs import INPUT_SHAPES, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import collective_bytes_from_hlo, roofline_terms
+from repro.launch.sharding import batch_specs, cache_specs, named, param_specs
+from repro.models.transformer.model import (
+    init_params,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.train.optimizer import adamw
+
+EXTRAP_SMALL = 2  # scanned layers in the two extrapolation compiles
+EXTRAP_MID = 6
+
+
+def _parse_opts(opts: str) -> dict:
+    """'opt_mla_absorb=1,opt_remat=none' -> dataclasses.replace kwargs."""
+    out = {}
+    for kv in filter(None, (opts or "").split(",")):
+        k, v = kv.split("=")
+        if v in ("0", "1", "true", "false", "True", "False"):
+            out[k] = v in ("1", "true", "True")
+        elif v.isdigit():
+            out[k] = int(v)
+        else:
+            out[k] = v
+    return out
+
+
+def _compile_step(base_cfg, shape_name: str, mesh, *, unroll: bool):
+    """Lower + compile one config variant; returns (compiled, cfg, n_scan).
+
+    ``unroll=True`` also unrolls the *inner* flash/SSD chunk loops
+    (layers.UNROLL_INNER): XLA cost_analysis counts any loop body once, so
+    the extrapolation compiles must be loop-free to account attention/SSM
+    flops faithfully. The unrolled flash skips fully-masked causal blocks,
+    i.e. it measures the triangular schedule a real TPU kernel executes.
+    """
+    from repro.models.transformer import layers as _layers
+
+    _layers.UNROLL_INNER = unroll
+    if unroll and INPUT_SHAPES[shape_name].seq_len >= 32_768:
+        # bound the unrolled block count at long seq (cost-equivalent: total
+        # score flops/bytes are chunk-invariant; only VMEM tiling differs)
+        base_cfg = dataclasses.replace(base_cfg, opt_flash_chunk=4096)
+    try:
+        spec = input_specs(base_cfg, shape_name)
+        cfg = spec["cfg"]
+        kind = spec["shape"].kind
+
+        jax.set_mesh(mesh)  # context mesh: enables PartitionSpec hints in-model
+        params_sds = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+        pspecs = named(param_specs(cfg, params_sds, mesh), mesh)
+        bspecs = named(batch_specs(cfg, spec["batch"], mesh), mesh)
+        rep = NamedSharding(mesh, P())
+
+        if kind == "train":
+            opt = adamw(1e-3)
+            opt_sds = jax.eval_shape(opt.init, params_sds)
+            ospecs = named(param_specs(cfg, opt_sds, mesh), mesh)
+            step = make_train_step(cfg, opt, unroll=unroll)
+            metrics_sds = jax.eval_shape(
+                lambda p, o, b: step(p, o, b)[2], params_sds, opt_sds,
+                spec["batch"],
+            )
+            jitted = jax.jit(
+                step,
+                in_shardings=(pspecs, ospecs, bspecs),
+                out_shardings=(
+                    pspecs,
+                    ospecs,
+                    jax.tree_util.tree_map(lambda _: rep, metrics_sds),
+                ),
+            )
+            lowered = jitted.lower(params_sds, opt_sds, spec["batch"])
+        elif kind == "prefill":
+            step = make_prefill_step(cfg, unroll=unroll)
+            jitted = jax.jit(step, in_shardings=(pspecs, bspecs))
+            lowered = jitted.lower(params_sds, spec["batch"])
+        else:  # decode
+            step = make_decode_step(cfg, unroll=unroll)
+            cspecs = named(cache_specs(cfg, spec["caches"], mesh), mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(pspecs, bspecs, rep, cspecs),
+                out_shardings=(rep, cspecs),
+            )
+            lowered = jitted.lower(
+                params_sds, spec["batch"], spec["pos"], spec["caches"]
+            )
+        compiled = lowered.compile()
+    finally:
+        _layers.UNROLL_INNER = False
+    n_lead = cfg.first_dense_layers if cfg.family == "moe" else 0
+    return compiled, cfg, cfg.num_layers - n_lead
+
+
+def _costs(compiled, scan_trips: int) -> dict:
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo, scan_trips=scan_trips)
+    return {
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "collectives": coll,
+    }
+
+
+def _extrapolate(small: dict, mid: dict, n_small: int, n_mid: int, n_full: int):
+    """Linear-in-depth extrapolation of per-device costs."""
+    out = {}
+    for key in ("flops", "bytes_accessed"):
+        per_layer = (mid[key] - small[key]) / (n_mid - n_small)
+        out[key] = small[key] + per_layer * (n_full - n_small)
+        out[key + "_per_layer"] = per_layer
+    coll = {}
+    for k in set(small["collectives"]) | set(mid["collectives"]):
+        if k in ("scan_trips",):
+            continue
+        a = small["collectives"].get(k, 0)
+        b = mid["collectives"].get(k, 0)
+        per_layer = (b - a) / (n_mid - n_small)
+        coll[k] = a + per_layer * (n_full - n_small)
+    out["collectives"] = coll
+    return out
+
+
+def lower_one(
+    arch: str, shape_name: str, multi_pod: bool = False, fast: bool = False,
+    opts: str = "",
+):
+    """Full compile + cost extrapolation for one combination.
+
+    ``fast=True`` skips the two extrapolation compiles (used for the
+    multi-pod sweep, which proves sharding/lowering; the roofline table is
+    single-pod only).
+    """
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    base_cfg = get_arch(arch)
+    if opts:
+        base_cfg = dataclasses.replace(base_cfg, **_parse_opts(opts))
+    n_lead = base_cfg.first_dense_layers if base_cfg.family == "moe" else 0
+
+    # --- the production artifact: full depth, scanned ----------------------
+    t0 = time.perf_counter()
+    compiled, vcfg, n_scan_full = _compile_step(
+        base_cfg, shape_name, mesh, unroll=False
+    )
+    t_compile = time.perf_counter() - t0
+    mem = compiled.memory_analysis()
+    full_scan_costs = _costs(compiled, scan_trips=n_scan_full)
+
+    # --- two-point unrolled extrapolation ----------------------------------
+    if fast:
+        extrap = {
+            "flops": full_scan_costs["flops"],
+            "bytes_accessed": full_scan_costs["bytes_accessed"],
+            "collectives": full_scan_costs["collectives"],
+        }
+        small = mid = None
+    else:
+        extrap = None
+    cfg_small = dataclasses.replace(base_cfg, num_layers=n_lead + EXTRAP_SMALL)
+    cfg_mid = dataclasses.replace(base_cfg, num_layers=n_lead + EXTRAP_MID)
+    if extrap is None:
+        c_small, _, _ = _compile_step(cfg_small, shape_name, mesh, unroll=True)
+        small = _costs(c_small, scan_trips=1)
+        del c_small
+        c_mid, _, _ = _compile_step(cfg_mid, shape_name, mesh, unroll=True)
+        mid = _costs(c_mid, scan_trips=1)
+        del c_mid
+        extrap = _extrapolate(small, mid, EXTRAP_SMALL, EXTRAP_MID, n_scan_full)
+
+    kind = INPUT_SHAPES[shape_name].kind
+    chips = 512 if multi_pod else 256
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "t_compile_s": round(t_compile, 2),
+        # per-device, depth-extrapolated (see module docstring)
+        "flops": extrap["flops"],
+        "bytes_accessed": extrap["bytes_accessed"],
+        "collectives": extrap["collectives"],
+        "flops_global": extrap["flops"] * chips,
+        "scan_hlo_crosscheck": {
+            "flops": full_scan_costs["flops"],
+            "collective_total": full_scan_costs["collectives"]["total"],
+        },
+        "memory": {
+            "argument_size_gib": mem.argument_size_in_bytes / 2**30,
+            "output_size_gib": mem.output_size_in_bytes / 2**30,
+            "temp_size_gib": mem.temp_size_in_bytes / 2**30,
+            "peak_gib": mem.peak_memory_in_bytes / 2**30,
+        },
+        "params": base_cfg.param_count(),
+        "active_params": base_cfg.active_param_count(),
+        "variant_window": vcfg.attn_window,
+        "opts": opts,
+    }
+    record["roofline"] = roofline_terms(record)
+    return record, compiled
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument(
+        "--fast", action="store_true",
+        help="skip extrapolation compiles (multi-pod sharding proof only)",
+    )
+    ap.add_argument(
+        "--opts", default="",
+        help="comma-separated ArchConfig overrides, e.g. opt_remat=none",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    jobs = []
+    if args.all:
+        for a in list_archs():
+            for s in INPUT_SHAPES:
+                jobs.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        jobs.append((args.arch, args.shape))
+
+    failures = []
+    for arch, shape in jobs:
+        tag = f"{arch}__{shape}__{'2x16x16' if args.multi_pod else '16x16'}"
+        if args.opts:
+            tag += "__" + args.opts.replace("=", "").replace(",", "_")
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip] {tag} (cached)")
+            continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        try:
+            t0 = time.perf_counter()
+            record, compiled = lower_one(
+                arch, shape, args.multi_pod, fast=args.fast, opts=args.opts
+            )
+            r = record["roofline"]
+            print(
+                f"  flops/dev={record['flops']:.3e} coll/dev="
+                f"{record['collectives'].get('total', 0):.3e} "
+                f"peak/dev={record['memory']['peak_gib']:.2f}GiB "
+                f"bottleneck={r['bottleneck']} "
+                f"useful={r['useful_flops_ratio']:.2f} "
+                f"wall={time.perf_counter()-t0:.0f}s",
+                flush=True,
+            )
+            with open(path, "w") as f:
+                json.dump(record, f, indent=2)
+            del compiled
+        except Exception as e:  # noqa: BLE001 — record and continue
+            failures.append((tag, str(e)))
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(f"  {tag}: {err[:200]}")
+        raise SystemExit(1)
+    print("\nall dry-runs OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""ShapeDtypeStruct stand-ins for every (architecture x input shape) pair.
+
+No device allocation: these drive ``jit(...).lower(...)`` in the dry-run.
+Decode shapes lower ``serve_step`` (one token against a context-length cache);
+``long_500k`` on full-attention architectures selects the documented
+sliding-window variant (DESIGN.md §4, window 8192).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.config import ArchConfig
+from repro.models.transformer.model import init_caches
+
+LONG_WINDOW = 8192  # documented sliding-window variant for long_500k
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def variant_config(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """Arch variant actually lowered for this shape (window for long decode)."""
+    if shape.name == "long_500k":
+        needs_window = (
+            cfg.num_heads > 0  # has attention
+            and cfg.attn_window is None  # full attention
+            and cfg.family != "ssm"
+        )
+        if needs_window:
+            return dataclasses.replace(cfg, attn_window=LONG_WINDOW)
+    return cfg
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ArchConfig, B: int, S: int) -> dict:
+    """Token-batch ShapeDtypeStructs for train/prefill."""
+    if cfg.num_codebooks:
+        return {"tokens": _sds((B, S, cfg.num_codebooks), jnp.int32)}
+    if cfg.num_patches:
+        s_text = S - cfg.num_patches
+        assert s_text > 0
+        return {
+            "tokens": _sds((B, s_text), jnp.int32),
+            "patches": _sds((B, cfg.num_patches, cfg.d_model), jnp.bfloat16),
+        }
+    return {"tokens": _sds((B, S), jnp.int32)}
+
+
+def decode_batch_struct(cfg: ArchConfig, B: int) -> dict:
+    if cfg.num_codebooks:
+        return {"tokens": _sds((B, 1, cfg.num_codebooks), jnp.int32)}
+    return {"tokens": _sds((B, 1), jnp.int32)}
+
+
+def cache_struct(cfg: ArchConfig, B: int, context_len: int):
+    return jax.eval_shape(lambda: init_caches(cfg, B, context_len))
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """Everything the dry-run needs for one (arch, shape) pair."""
+    shape = INPUT_SHAPES[shape_name]
+    vcfg = variant_config(cfg, shape)
+    out = {"shape": shape, "cfg": vcfg}
+    if shape.kind in ("train", "prefill"):
+        out["batch"] = batch_struct(vcfg, shape.global_batch, shape.seq_len)
+    else:
+        out["batch"] = decode_batch_struct(vcfg, shape.global_batch)
+        out["pos"] = _sds((), jnp.int32)
+        out["caches"] = cache_struct(vcfg, shape.global_batch, shape.seq_len)
+    return out

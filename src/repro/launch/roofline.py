@@ -1,0 +1,156 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch, mesh), in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs / (chips * 197e12 bf16 FLOP/s)
+  memory     = HLO_bytes / (chips * 819e9 B/s HBM)
+  collective = collective_bytes / (chips * 50e9 B/s per ICI link)
+
+``cost_analysis`` does not report collective traffic, so we parse the
+compiled HLO: every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute contributes its result-shape bytes. Ops inside while-loop
+bodies (the layer scan) are scaled by the scan trip count, which the caller
+passes from the config (XLA keeps the trip count in the loop condition; the
+config value is authoritative and simpler).
+"""
+from __future__ import annotations
+
+import re
+
+# TPU v5e, per chip
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string like 'bf16[128,32,96]' or a tuple."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str, scan_trips: int = 1) -> dict:
+    """Sum collective traffic from HLO text.
+
+    Returns {op_kind: bytes, ..., 'total': bytes, 'count': n}. Collectives in
+    computations invoked by a `while` op are multiplied by ``scan_trips``.
+    """
+    # 1. find computations used as while bodies/conditions
+    loop_comps: set[str] = set()
+    for m in re.finditer(r"while\(.*?\).*?body=%?([\w\.\-]+)", hlo_text):
+        loop_comps.add(m.group(1))
+    # transitive: computations called from loop bodies (fusions/calls)
+    comp_bodies: dict[str, str] = {}
+    for m in re.finditer(
+        r"^(?:ENTRY )?%?([\w\.\-]+) \([^)]*\) -> .*? \{(.*?)^\}",
+        hlo_text,
+        re.M | re.S,
+    ):
+        comp_bodies[m.group(1)] = m.group(2)
+
+    def closure(roots: set[str]) -> set[str]:
+        seen = set(roots)
+        frontier = list(roots)
+        while frontier:
+            c = frontier.pop()
+            body = comp_bodies.get(c, "")
+            for m in re.finditer(
+                r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)", body
+            ):
+                if m.group(1) not in seen:
+                    seen.add(m.group(1))
+                    frontier.append(m.group(1))
+        return seen
+
+    loop_comps = closure(loop_comps)
+
+    out = {k: 0 for k in _COLLECTIVES}
+    count = 0
+    for comp, body in comp_bodies.items():
+        mult = scan_trips if comp in loop_comps else 1
+        for line in body.splitlines():
+            line = line.strip()
+            m = re.match(r"(?:ROOT )?%?[\w\.\-]+ = (.*)$", line)
+            if not m:
+                continue
+            rest = m.group(1)
+            for kind in _COLLECTIVES:
+                # result shape precedes the op name: "bf16[...] all-gather("
+                if re.search(rf"\]\S* {kind}(?:-start|-done)?\(", rest):
+                    shape_str = rest.split(f" {kind}")[0]
+                    b = _shape_bytes(shape_str)
+                    out[kind] += b * mult
+                    count += mult
+                    break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["count"] = count
+    out["scan_trips"] = scan_trips
+    return out
+
+
+def roofline_terms(record: dict) -> dict:
+    """The three terms (seconds) + dominant bottleneck for a dry-run record.
+
+    ``flops`` / ``bytes_accessed`` / ``collectives`` in the record are
+    per-device (XLA SPMD cost_analysis convention), so each term is simply
+    value / per-chip-bandwidth; the global formulation
+    ``HLO_total / (chips * bw)`` is identical.
+    """
+    t_compute = record["flops"] / PEAK_FLOPS
+    t_memory = record["bytes_accessed"] / HBM_BW
+    t_coll = record["collectives"]["total"] / ICI_BW
+    terms = {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+    }
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = {
+        "t_compute_s": "compute",
+        "t_memory_s": "memory",
+        "t_collective_s": "collective",
+    }[dom]
+    # useful-FLOPs ratio: 6*N_active*D for train, 2*N_active*D for inference
+    tokens = _tokens_for(record)
+    n_act = record.get("active_params", 0)
+    mult = 6.0 if record["kind"] == "train" else 2.0
+    model_flops = mult * n_act * tokens  # global
+    terms["model_flops"] = model_flops
+    hlo_global = record["flops"] * record["chips"]
+    terms["useful_flops_ratio"] = (
+        model_flops / hlo_global if hlo_global else 0.0
+    )
+    return terms
+
+
+def _tokens_for(record: dict) -> int:
+    from repro.launch.input_specs import INPUT_SHAPES
+
+    shp = INPUT_SHAPES[record["shape"]]
+    if shp.kind == "decode":
+        return shp.global_batch  # one new token per sequence
+    return shp.global_batch * shp.seq_len

@@ -1,0 +1,157 @@
+"""Sharding rules: params / optimizer / batch / caches -> PartitionSpec trees.
+
+Tensor parallelism over the ``model`` axis (attention heads, FFN hidden dim,
+vocab, MoE experts, SSM inner dim); batch over ``("pod", "data")``. Scanned
+block stacks get a leading unsharded layer axis. Dimensions that do not
+divide the axis size (e.g. MQA kv=1 caches, Hymba's 50 SSM heads) are left
+replicated — a documented cost, revisited in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.transformer.config import ArchConfig
+
+
+def _last(path) -> str:
+    for e in reversed(path):
+        if hasattr(e, "key"):
+            return str(e.key)
+    return ""
+
+
+def _path_keys(path) -> list[str]:
+    return [str(e.key) for e in path if hasattr(e, "key")]
+
+
+def _spec_for_leaf(keys: list[str], ndim: int, cfg: ArchConfig, axis_size: int):
+    """PartitionSpec for one (unstacked) param leaf by name pattern."""
+    if not keys:  # e.g. the optimizer step counter (NamedTuple field)
+        return P(*([None] * ndim))
+    name = keys[-1]
+    shard = lambda *s: P(*s)  # noqa: E731
+
+    if name == "embed":
+        if cfg.num_codebooks:
+            return shard(None, "model", None)
+        return shard("model", None)
+    if name == "lm_head":
+        return shard(None, "model")
+    if name in ("wq", "wk", "wv", "wq_b", "wkv_b"):
+        return shard(None, "model")
+    if name in ("wo",):
+        return shard("model", None)
+    if name in ("wq_a", "wkv_a", "router"):
+        return shard(None, None)
+    if name in ("w_in", "w_gate"):
+        return shard("model", None, None) if ndim == 3 else shard(None, "model")
+    if name == "w_out":
+        return shard("model", None, None) if ndim == 3 else shard("model", None)
+    if name == "in_proj":
+        return shard(None, "model")
+    if name == "out_proj":
+        return shard("model", None)
+    # norms, biases, A_log, D, dt_bias, scalar slots
+    return P(*([None] * ndim))
+
+
+def param_specs(cfg: ArchConfig, params_shapes, mesh) -> dict:
+    """PartitionSpec pytree matching ``params_shapes`` (a ShapeDtypeStruct tree)."""
+    axis = mesh.shape["model"]
+
+    def build(path, leaf):
+        keys = _path_keys(path)
+        stacked = "blocks" in keys  # works for params and optimizer slots
+        ndim = leaf.ndim - (1 if stacked else 0)
+        spec = _spec_for_leaf(keys, ndim, cfg, axis)
+        if stacked:
+            spec = P(None, *spec)
+        # drop shard axes that don't divide the dimension
+        dims = leaf.shape
+        fixed = []
+        for i, s in enumerate(spec):
+            if s is None:
+                fixed.append(None)
+            else:
+                size = mesh.shape[s] if isinstance(s, str) else 1
+                fixed.append(s if dims[i] % size == 0 else None)
+        return P(*fixed)
+
+    return jax.tree_util.tree_map_with_path(build, params_shapes)
+
+
+def batch_specs(cfg: ArchConfig, batch_shapes, mesh) -> dict:
+    """Batch inputs: leading batch dim over (pod, data) when it divides."""
+    from repro.launch.mesh import data_axes
+
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    def build(path, leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        lead = dp if (leaf.ndim and b % dp_size == 0 and b > 1) else None
+        return P(lead, *([None] * (leaf.ndim - 1))) if leaf.ndim else P()
+
+    return jax.tree_util.tree_map_with_path(build, batch_shapes)
+
+
+def cache_specs(cfg: ArchConfig, cache_shapes, mesh) -> dict:
+    """KV/SSM caches: batch over (pod,data); head-like dims over model."""
+    from repro.launch.mesh import data_axes
+
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    model_size = mesh.shape["model"]
+
+    def build(path, leaf):
+        keys = _path_keys(path)
+        stacked = keys and keys[0] == "scan"
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        name = keys[-1]
+        if name in ("k", "v"):  # (B, S, KV, hd)
+            head_ok = shape[2] % model_size == 0
+            # MQA (kv=1): fall back to sequence-sharding the cache over the
+            # model axis (attention contracts S -> partial softmax + psum)
+            seq_ok = (not head_ok) and shape[1] % model_size == 0
+            spec = [
+                dp if shape[0] % dp_size == 0 and shape[0] > 1 else None,
+                "model" if seq_ok else None,
+                "model" if head_ok else None,
+                None,
+            ]
+        elif name in ("c_kv", "k_rope"):  # (B, S, latent) — MLA has no head
+            # dim: sequence-shard the latent cache over the model axis
+            spec = [
+                dp if shape[0] % dp_size == 0 and shape[0] > 1 else None,
+                "model" if shape[1] % model_size == 0 else None,
+                None,
+            ]
+        elif name == "state":  # (B, H, N, P)
+            spec = [
+                dp if shape[0] % dp_size == 0 and shape[0] > 1 else None,
+                "model" if shape[1] % model_size == 0 else None,
+                None,
+                None,
+            ]
+        else:
+            spec = [None] * len(shape)
+        if stacked:
+            spec = [None] + spec
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(build, cache_shapes)
+
+
+def named(tree_specs, mesh):
+    """PartitionSpec tree -> NamedSharding tree."""
+    from jax.sharding import NamedSharding
+
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

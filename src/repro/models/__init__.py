@@ -1,0 +1,1 @@
+"""Model zoo: GNNs (the paper's workload) + the assigned transformer families."""

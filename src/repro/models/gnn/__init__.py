@@ -1,0 +1,8 @@
+from repro.models.gnn.layers import (
+    GNNSpec,
+    init_gnn_params,
+    gnn_layer_apply,
+    gnn_forward,
+)
+
+__all__ = ["GNNSpec", "init_gnn_params", "gnn_layer_apply", "gnn_forward"]

@@ -1,0 +1,194 @@
+"""GNN layers behind the paper's layer-centric API (§6).
+
+Each layer is a "single-GPU kernel used as a black box": it consumes the
+*mixed frontier* buffer (local + received rows, built by the shuffle) and
+per-edge indices, and produces the local rows of the next depth. The same
+function serves split-parallel, data-parallel, and single-device execution —
+only the shuffle that builds ``mixed`` differs (paper's Algorithm 2).
+
+Supported models: GraphSAGE (mean), GAT (multi-head attention), GCN.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import segment_ops
+
+
+@dataclass(frozen=True)
+class GNNSpec:
+    model: str = "sage"  # sage | gat | gcn
+    in_dim: int = 128
+    hidden_dim: int = 256  # paper default 256
+    out_dim: int = 16
+    num_layers: int = 3  # paper default 3
+    num_heads: int = 4  # GAT only
+    agg_backend: str = "jnp"  # jnp | pallas
+    dtype: str = "float32"
+
+    def layer_dims(self) -> list[tuple[int, int]]:
+        dims = []
+        d_in = self.in_dim
+        for i in range(self.num_layers):
+            d_out = self.out_dim if i == self.num_layers - 1 else self.hidden_dim
+            dims.append((d_in, d_out))
+            d_in = d_out
+        return dims
+
+
+def _glorot(key, shape, dtype):
+    fan_in, fan_out = shape[-2], shape[-1]
+    lim = float(np.sqrt(6.0 / (fan_in + fan_out)))
+    return jax.random.uniform(key, shape, dtype, -lim, lim)
+
+
+def init_gnn_params(key: jax.Array, spec: GNNSpec) -> list[dict]:
+    dtype = jnp.dtype(spec.dtype)
+    params = []
+    for i, (d_in, d_out) in enumerate(spec.layer_dims()):
+        key, k1, k2, k3, k4 = jax.random.split(key, 5)
+        if spec.model == "sage":
+            params.append(
+                {
+                    "w_self": _glorot(k1, (d_in, d_out), dtype),
+                    "w_neigh": _glorot(k2, (d_in, d_out), dtype),
+                    "b": jnp.zeros((d_out,), dtype),
+                }
+            )
+        elif spec.model == "gcn":
+            params.append(
+                {
+                    "w": _glorot(k1, (d_in, d_out), dtype),
+                    "b": jnp.zeros((d_out,), dtype),
+                }
+            )
+        elif spec.model == "gat":
+            H = spec.num_heads
+            dh = d_out // H
+            assert dh * H == d_out, "gat: out dim must divide num_heads"
+            params.append(
+                {
+                    "w": _glorot(k1, (d_in, H, dh), dtype),
+                    "a_src": _glorot(k2, (1, H, dh), dtype)[0],
+                    "a_dst": _glorot(k3, (1, H, dh), dtype)[0],
+                    "b": jnp.zeros((d_out,), dtype),
+                }
+            )
+        else:
+            raise ValueError(f"unknown GNN model {spec.model!r}")
+    return params
+
+
+def gnn_layer_apply(
+    spec: GNNSpec,
+    layer_params: dict,
+    mixed: jnp.ndarray,  # (M, F_in) mixed-frontier rows (local + received)
+    edge_src: jnp.ndarray,  # (E,) int32 into mixed
+    edge_dst: jnp.ndarray,  # (E,) int32 into [0, N)
+    edge_mask: jnp.ndarray,  # (E,) bool
+    self_pos: jnp.ndarray,  # (N,) int32 into mixed (self rows are local)
+    num_out: int,
+    is_last: bool,
+) -> jnp.ndarray:
+    """One GNN layer on one device (the layer-centric 'black box' kernel)."""
+    backend = spec.agg_backend
+    if spec.model == "sage":
+        h_src = mixed[edge_src]  # (E, F_in)
+        agg = segment_ops.segment_mean(
+            h_src, edge_dst, edge_mask, num_out, backend=backend
+        )
+        h_self = mixed[self_pos]
+        out = h_self @ layer_params["w_self"] + agg @ layer_params["w_neigh"]
+        out = out + layer_params["b"]
+    elif spec.model == "gcn":
+        h_src = mixed[edge_src]
+        agg = segment_ops.segment_mean(
+            h_src, edge_dst, edge_mask, num_out, backend=backend
+        )
+        out = agg @ layer_params["w"] + layer_params["b"]
+    elif spec.model == "gat":
+        w = layer_params["w"]  # (F_in, H, dh)
+        H, dh = w.shape[1], w.shape[2]
+        wh = jnp.einsum("mf,fhd->mhd", mixed, w)  # (M, H, dh)
+        s_src = jnp.einsum("mhd,hd->mh", wh, layer_params["a_src"])  # (M, H)
+        s_dst = jnp.einsum("mhd,hd->mh", wh, layer_params["a_dst"])
+        logits = jax.nn.leaky_relu(
+            s_src[edge_src] + s_dst[self_pos][edge_dst], negative_slope=0.2
+        )  # (E, H)
+        alpha = segment_ops.edge_softmax(
+            logits, edge_dst, edge_mask, num_out, backend=backend
+        )  # (E, H)
+        msg = wh[edge_src] * alpha[:, :, None]  # (E, H, dh)
+        agg = segment_ops.segment_sum(
+            msg.reshape(msg.shape[0], H * dh), edge_dst, edge_mask, num_out,
+            backend=backend,
+        )
+        out = agg + layer_params["b"]
+    else:
+        raise ValueError(spec.model)
+    if not is_last:
+        out = jax.nn.relu(out)
+    return out
+
+
+def gnn_forward(
+    spec: GNNSpec,
+    params: list[dict],
+    h_input: jnp.ndarray,  # (P, N_L, F_in) loaded input features per device
+    plan_arrays: dict,  # device pytree from repro.train.plan_io.plan_to_device
+    shuffle_fn,  # callable(h, send_idx) -> mixed, e.g. core.shuffle.sim_shuffle
+) -> jnp.ndarray:
+    """Split-parallel forward pass (Algorithm 2): shuffle -> gnn_layer, per depth.
+
+    Runs depths L-1 .. 0; returns (P, N_0, out_dim) target logits.
+    ``plan_arrays['layers']`` is ordered by dst depth (0 = targets), so we
+    iterate it reversed.
+    """
+    h = h_input
+    L = spec.num_layers
+    for li in range(L - 1, -1, -1):
+        lp = plan_arrays["layers"][li]
+        mixed = shuffle_fn(h, lp["send_idx"])  # (P, M, F)
+        num_out = lp["self_pos"].shape[-1]  # static: N_i
+        layer_params = params[L - 1 - li]  # params[0] consumes input features
+        apply_one = lambda m, es, ed, em, sp: gnn_layer_apply(  # noqa: E731
+            spec, layer_params, m, es, ed, em, sp, num_out, is_last=(li == 0)
+        )
+        h = jax.vmap(apply_one)(
+            mixed, lp["edge_src"], lp["edge_dst"], lp["edge_mask"], lp["self_pos"]
+        )
+    return h
+
+
+def gnn_forward_spmd(
+    spec: GNNSpec,
+    params: list[dict],
+    h_input: jnp.ndarray,  # (N_L, F) this device's input rows
+    plan_arrays: dict,  # per-device slices (leading P axis removed)
+    axis_name: str,
+) -> jnp.ndarray:
+    """Per-device forward for `shard_map` execution (same math as sim mode)."""
+    from repro.core.shuffle import spmd_shuffle
+
+    h = h_input
+    L = spec.num_layers
+    for li in range(L - 1, -1, -1):
+        lp = plan_arrays["layers"][li]
+        mixed = spmd_shuffle(h, lp["send_idx"], axis_name)
+        num_out = lp["self_pos"].shape[-1]
+        h = gnn_layer_apply(
+            spec,
+            params[L - 1 - li],
+            mixed,
+            lp["edge_src"],
+            lp["edge_dst"],
+            lp["edge_mask"],
+            lp["self_pos"],
+            num_out,
+            is_last=(li == 0),
+        )
+    return h

@@ -1,0 +1,354 @@
+"""Per-family transformer blocks + parameter init.
+
+Families:
+  dense / audio / vlm -- [ln1 -> attention] + [ln2 -> mlp]
+  moe                 -- [ln1 -> attention(MLA optional)] + [ln2 -> moe]
+  ssm                 -- [ln1 -> mamba2]
+  hybrid (Hymba)      -- ln1 -> (attention || mamba2, summed) + [ln2 -> mlp]
+
+Each block function has three modes:
+  train   -- full sequence, chunked-flash attention, no cache
+  prefill -- full sequence, emits the KV/SSM cache
+  decode  -- one token against the cache (ring-buffered when windowed)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer.config import ArchConfig
+from repro.models.transformer.layers import (
+    apply_rope,
+    attention_decode,
+    attention_flash,
+    attention_full,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+)
+from repro.models.transformer.moe import moe_apply, moe_init
+from repro.models.transformer.ssm import ssm_apply_decode, ssm_apply_train, ssm_init
+
+FLASH_THRESHOLD = 2048  # use chunked-flash attention for S >= this
+
+
+def _norm_init(d):
+    return jnp.ones((d,), jnp.float32)
+
+
+def _dense(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return jax.random.normal(key, shape, dtype) * fan_in**-0.5
+
+
+# --------------------------------------------------------------------------- #
+# Attention params + apply (GQA and MLA)
+# --------------------------------------------------------------------------- #
+def attn_init(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    keys = jax.random.split(key, 8)
+    if cfg.use_mla:
+        H = cfg.num_heads
+        qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+        p = {
+            "wkv_a": _dense(keys[0], (d, cfg.kv_lora_rank + cfg.qk_rope_dim), dtype),
+            "kv_norm": _norm_init(cfg.kv_lora_rank),
+            "wkv_b": _dense(
+                keys[1],
+                (cfg.kv_lora_rank, H * (cfg.qk_nope_dim + cfg.v_head_dim)),
+                dtype,
+            ),
+            "wo": _dense(keys[2], (H * cfg.v_head_dim, d), dtype),
+        }
+        if cfg.q_lora_rank:
+            p["wq_a"] = _dense(keys[3], (d, cfg.q_lora_rank), dtype)
+            p["q_norm"] = _norm_init(cfg.q_lora_rank)
+            p["wq_b"] = _dense(keys[4], (cfg.q_lora_rank, H * qd), dtype)
+        else:
+            p["wq"] = _dense(keys[3], (d, H * qd), dtype)
+        return p
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": _dense(keys[0], (d, H * hd), dtype),
+        "wk": _dense(keys[1], (d, KV * hd), dtype),
+        "wv": _dense(keys[2], (d, KV * hd), dtype),
+        "wo": _dense(keys[3], (H * hd, d), dtype),
+    }
+
+
+def _gqa_qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, KV, hd)
+    v = (x @ p["wv"]).reshape(B, S, KV, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_apply(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    *,
+    mode: str,
+    cache: dict | None = None,
+    pos=None,
+    window: int | None = None,
+):
+    """Returns (out, new_cache)."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if mode in ("train", "prefill"):
+        positions = jnp.arange(S)[None, :]
+        q, k, v = _gqa_qkv(p, x, cfg, positions)
+        if S >= FLASH_THRESHOLD:
+            out = attention_flash(q, k, v, chunk=cfg.opt_flash_chunk,
+                                  window=window)
+        else:
+            out = attention_full(q, k, v, causal=True, window=window)
+        new_cache = None
+        if mode == "prefill":
+            ck, cv = k, v
+            if window is not None and window < S:
+                ck, cv = k[:, -window:], v[:, -window:]
+            new_cache = {"k": ck, "v": cv}
+        out = out.reshape(B, S, H * hd)
+        return (out @ p["wo"]).astype(x.dtype), new_cache
+
+    # ---- decode: one token, ring-buffered cache ---------------------------
+    assert cache is not None and pos is not None
+    S_phys = cache["k"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _gqa_qkv(p, x, cfg, positions)
+    slot = pos % S_phys
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    cache_len = jnp.minimum(pos + 1, S_phys)
+    out = attention_decode(q, ck, cv, cache_len, window=None)
+    out = out.reshape(B, 1, H * hd)
+    return (out @ p["wo"]).astype(x.dtype), {"k": ck, "v": cv}
+
+
+def mla_apply(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    *,
+    mode: str,
+    cache: dict | None = None,
+    pos=None,
+    window: int | None = None,
+):
+    """DeepSeek-V2 multi-head latent attention. Cache = compressed latents."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    def q_proj(xq, positions):
+        if cfg.q_lora_rank:
+            cq = rms_norm(xq @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+            q = (cq @ p["wq_b"]).reshape(B, -1, H, dn + dr)
+        else:
+            q = (xq @ p["wq"]).reshape(B, -1, H, dn + dr)
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        return jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    def kv_expand(c_kv, k_rope):
+        # c_kv: (B, T, kv_lora), k_rope: (B, T, dr) shared across heads
+        kv = (c_kv @ p["wkv_b"]).reshape(B, -1, H, dn + dv)
+        k_nope, v = kv[..., :dn], kv[..., dn:]
+        k_rope_h = jnp.broadcast_to(
+            k_rope[:, :, None, :], (*k_rope.shape[:2], H, dr)
+        )
+        k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+        return k, v
+
+    if mode in ("train", "prefill"):
+        positions = jnp.arange(S)[None, :]
+        ckv = x @ p["wkv_a"]  # (B, S, lora + dr)
+        c_kv = rms_norm(ckv[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+        k_rope = apply_rope(
+            ckv[..., cfg.kv_lora_rank :][:, :, None, :], positions, cfg.rope_theta
+        )[:, :, 0, :]
+        q = q_proj(x, positions)
+        k, v = kv_expand(c_kv, k_rope)
+        if S >= FLASH_THRESHOLD:
+            out = attention_flash(q, k, v, chunk=cfg.opt_flash_chunk,
+                                  window=window)
+        else:
+            out = attention_full(q, k, v, causal=True, window=window)
+        new_cache = None
+        if mode == "prefill":
+            cc, cr = c_kv, k_rope
+            if window is not None and window < S:
+                cc, cr = c_kv[:, -window:], k_rope[:, -window:]
+            new_cache = {"c_kv": cc, "k_rope": cr}
+        out = out.reshape(B, S, H * dv)
+        return (out @ p["wo"]).astype(x.dtype), new_cache
+
+    assert cache is not None and pos is not None
+    S_phys = cache["c_kv"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    ckv = x @ p["wkv_a"]
+    c_kv = rms_norm(ckv[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(
+        ckv[..., cfg.kv_lora_rank :][:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0, :]
+    slot = pos % S_phys
+    cc = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, slot, axis=1)
+    cr = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope, slot, axis=1)
+    q = q_proj(x, positions)
+    cache_len = jnp.minimum(pos + 1, S_phys)
+    if cfg.opt_mla_absorb:
+        # Beyond-paper optimization (EXPERIMENTS.md §Perf): absorb wkv_b into
+        # the query and score directly against the latent cache — per step
+        # this reads (S, kv_lora + dr) instead of materializing the expanded
+        # (S, H, dn + dv) keys/values, an H*(dn+dv)/(kv_lora+dr) HBM saving.
+        wkv_b = p["wkv_b"].reshape(cfg.kv_lora_rank, H, dn + dv)
+        w_k, w_v = wkv_b[..., :dn], wkv_b[..., dn:]
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope, w_k)  # (B,1,H,lora)
+        # §Perf iter B2: read the bf16 cache directly with f32 accumulation —
+        # pre-casting materialized an f32 copy of the whole latent cache
+        s = (
+            jnp.einsum("bqhl,bsl->bhqs", q_lat, cc,
+                       preferred_element_type=jnp.float32)
+            + jnp.einsum("bqhr,bsr->bhqs", q_rope, cr,
+                         preferred_element_type=jnp.float32)
+        ) / jnp.sqrt(jnp.float32(dn + dr))
+        valid = jnp.arange(S_phys) < cache_len
+        s = jnp.where(valid[None, None, None, :], s, -1e30)
+        prob = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhqs,bsl->bqhl", prob.astype(cc.dtype), cc)
+        out = jnp.einsum("bqhl,lhd->bqhd", o_lat, w_v)  # (B,1,H,dv)
+    else:
+        k, v = kv_expand(cc, cr)  # decode-time expansion of the latent cache
+        out = attention_decode(q, k, v, cache_len, window=None)
+    out = out.reshape(B, 1, H * dv)
+    return (out @ p["wo"]).astype(x.dtype), {"c_kv": cc, "k_rope": cr}
+
+
+# --------------------------------------------------------------------------- #
+# Block init / apply
+# --------------------------------------------------------------------------- #
+def block_init(key, cfg: ArchConfig, layer_idx: int, dtype) -> dict:
+    """One block's params. layer_idx only matters for first_dense MoE layers."""
+    d = cfg.d_model
+    keys = jax.random.split(key, 4)
+    p: dict = {}
+    if cfg.family == "ssm":
+        p["ln1"] = _norm_init(d)
+        p["ssm"] = ssm_init(keys[0], cfg, dtype)
+        return p
+    if cfg.family == "hybrid":
+        p["ln1"] = _norm_init(d)
+        p["attn"] = attn_init(keys[0], cfg, dtype)
+        p["ssm"] = ssm_init(keys[1], cfg, dtype)
+        p["ln2"] = _norm_init(d)
+        p["mlp"] = mlp_init(keys[2], d, cfg.d_ff, cfg.mlp_type, dtype)
+        return p
+    # attention families
+    p["ln1"] = _norm_init(d)
+    p["attn"] = attn_init(keys[0], cfg, dtype)
+    p["ln2"] = _norm_init(d)
+    if cfg.family == "moe" and layer_idx >= cfg.first_dense_layers:
+        p["moe"] = moe_init(keys[1], cfg, dtype)
+    else:
+        dff = cfg.d_ff or cfg.first_dense_d_ff
+        if cfg.family == "moe":
+            dff = cfg.first_dense_d_ff or cfg.d_ff
+        p["mlp"] = mlp_init(keys[1], d, dff, cfg.mlp_type, dtype)
+    return p
+
+
+def block_apply(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    *,
+    mode: str,
+    cache: dict | None = None,
+    pos=None,
+    window: int | None = None,
+) -> tuple[jnp.ndarray, dict | None, jnp.ndarray]:
+    """Returns (x_out, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+
+    if cfg.family == "ssm":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if mode == "decode":
+            y, state = ssm_apply_decode(p["ssm"], h, cache["state"], cfg)
+            new_cache["state"] = state
+        else:
+            y = ssm_apply_train(p["ssm"], h, cfg)
+            if mode == "prefill":
+                # final state for subsequent decode: replay as decode is O(S);
+                # we recompute the state from the chunked pass cheaply.
+                new_cache["state"] = _ssd_final_state(p["ssm"], h, cfg)
+        return x + y, (new_cache or None), aux
+
+    if cfg.family == "hybrid":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        attn_fn = mla_apply if cfg.use_mla else gqa_apply
+        a_out, a_cache = attn_fn(
+            p["attn"], h, cfg,
+            mode=mode,
+            cache=(cache or {}).get("attn"),
+            pos=pos,
+            window=window,
+        )
+        if mode == "decode":
+            s_out, state = ssm_apply_decode(p["ssm"], h, cache["state"], cfg)
+            new_cache["state"] = state
+        else:
+            s_out = ssm_apply_train(p["ssm"], h, cfg)
+            if mode == "prefill":
+                new_cache["state"] = _ssd_final_state(p["ssm"], h, cfg)
+        if a_cache is not None:
+            new_cache["attn"] = a_cache
+        # parallel heads, mean-fused (Hymba fuses attn+SSM head outputs)
+        x = x + 0.5 * (a_out + s_out)
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(p["mlp"], h2, cfg.mlp_type)
+        return x, (new_cache or None), aux
+
+    # ---- attention families (dense / moe / audio / vlm) -------------------
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    attn_fn = mla_apply if cfg.use_mla else gqa_apply
+    a_out, a_cache = attn_fn(
+        p["attn"], h, cfg, mode=mode, cache=cache, pos=pos, window=window
+    )
+    x = x + a_out
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        m_out, aux = moe_apply(p["moe"], h2, cfg)
+    else:
+        m_out = mlp_apply(p["mlp"], h2, cfg.mlp_type)
+    x = x + m_out
+    return x, a_cache, aux
+
+
+def _ssd_final_state(params, h, cfg):
+    """Final SSM state after a full sequence (for prefill -> decode handoff)."""
+    from repro.models.transformer.ssm import _split_proj
+
+    Bsz, S, _ = h.shape
+    H, P, N, G = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    proj = h @ params["in_proj"]
+    _, xs, Bm, _, dt = _split_proj(proj, cfg)
+    xs = xs.reshape(Bsz, S, H, P).astype(jnp.float32)
+    Bh = jnp.repeat(
+        Bm.reshape(Bsz, S, G, N), H // G, axis=2
+    ).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    dA = dt * A  # (B, S, H)
+    # state = sum_t exp(sum_{t'>t} dA_{t'}) * dt_t * B_t x_t^T
+    tail = jnp.cumsum(dA[:, ::-1], axis=1)[:, ::-1] - dA  # suffix sums excl. t
+    w = jnp.exp(tail)  # (B, S, H)
+    return jnp.einsum("bshn,bshp,bsh->bhnp", Bh, xs * dt[..., None], w)

@@ -1,0 +1,226 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA/MQA attention (full,
+sliding-window, chunked-flash), MLA (DeepSeek-V2), and MLP variants.
+
+Pure functions over param pytrees; activations default to the config dtype
+(bf16 on the TPU target), accumulations in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D) with D even; positions: broadcastable to (..., S)."""
+    D = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(D, theta), jnp.float32)  # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Attention cores
+# --------------------------------------------------------------------------- #
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, KV, D) -> (B, S, KV*groups, D) for GQA."""
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def attention_full(
+    q: jnp.ndarray,  # (B, S, H, D)
+    k: jnp.ndarray,  # (B, S, KV, D)
+    v: jnp.ndarray,  # (B, S, KV, Dv)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Materialized-scores attention (used for short sequences)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    k = _repeat_kv(k, H // KV)
+    v = _repeat_kv(v, H // KV)
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# Set True by the dry-run's cost-extrapolation compiles: XLA cost_analysis
+# counts loop bodies once, so the inner flash/SSD loops must be unrolled for
+# faithful FLOP/byte accounting. The unrolled form also skips fully-masked
+# causal blocks (j > i), matching what a real TPU flash kernel executes.
+UNROLL_INNER = False
+
+
+def attention_flash(
+    q: jnp.ndarray,  # (B, S, H, D)
+    k: jnp.ndarray,  # (B, S, KV, D)
+    v: jnp.ndarray,  # (B, S, KV, Dv)
+    *,
+    chunk: int = 1024,
+    window: int | None = None,
+) -> jnp.ndarray:
+    """Chunked online-softmax causal attention (pure JAX flash).
+
+    Scans KV chunks with running (max, denom, accum); peak memory is
+    O(S * chunk) instead of O(S^2).
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    Dv = v.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    k = _repeat_kv(k, H // KV)
+    v = _repeat_kv(v, H // KV)
+    scale = 1.0 / np.sqrt(D)
+    nq = S // chunk
+    qc = q.reshape(B, nq, chunk, H, D)
+
+    kc = k.reshape(B, nq, chunk, H, D)
+    vc = v.reshape(B, nq, chunk, H, Dv)
+
+    def block_update(carry, qi, kj, q_blk, k_blk, v_blk):
+        m, d, acc = carry
+        s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk).astype(jnp.float32)
+        s = s * scale
+        q_pos = qi * chunk + jnp.arange(chunk)
+        k_pos = kj * chunk + jnp.arange(chunk)
+        msk = q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            msk &= q_pos[:, None] - k_pos[None, :] < window
+        s = jnp.where(msk[None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        d_new = d * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), v_blk
+        ).astype(jnp.float32)
+        return m_new, d_new, acc_new
+
+    def init_carry():
+        return (
+            jnp.full((B, H, chunk), -1e30, jnp.float32),
+            jnp.zeros((B, H, chunk), jnp.float32),
+            jnp.zeros((B, H, chunk, Dv), jnp.float32),
+        )
+
+    if UNROLL_INNER:
+        outs = []
+        for qi in range(nq):
+            carry = init_carry()
+            # causal: only blocks kj <= qi; window: skip out-of-range blocks
+            lo = 0
+            if window is not None:
+                lo = max(0, (qi * chunk - (window - 1)) // chunk)
+            for kj in range(lo, qi + 1):
+                carry = block_update(
+                    carry, qi, kj, qc[:, qi], kc[:, kj], vc[:, kj]
+                )
+            m, d, acc = carry
+            outs.append(
+                (acc / jnp.maximum(d[..., None], 1e-30)).astype(q.dtype)
+            )
+        out = jnp.stack(outs, axis=2)  # (B, H, nq, chunk, Dv)
+        return out.reshape(B, H, S, Dv).transpose(0, 2, 1, 3)
+
+    def per_q_chunk(qi, q_blk):
+        def body(carry, kj):
+            k_blk = jax.lax.dynamic_index_in_dim(kc, kj, 1, keepdims=False)
+            v_blk = jax.lax.dynamic_index_in_dim(vc, kj, 1, keepdims=False)
+            return block_update(carry, qi, kj, q_blk, k_blk, v_blk), None
+
+        (m, d, acc), _ = jax.lax.scan(
+            body, init_carry(), jnp.arange(nq), unroll=1
+        )
+        out = acc / jnp.maximum(d[..., None], 1e-30)
+        return out.astype(q.dtype)  # (B, H, chunk, Dv)
+
+    outs = jax.lax.map(
+        lambda args: per_q_chunk(*args),
+        (jnp.arange(nq), jnp.moveaxis(qc, 1, 0)),
+    )  # (nq, B, H, chunk, Dv)
+    out = jnp.moveaxis(outs, 0, 2)  # (B, H, nq, chunk, Dv)
+    return out.reshape(B, H, S, Dv).transpose(0, 2, 1, 3)
+
+
+def attention_decode(
+    q: jnp.ndarray,  # (B, 1, H, D)
+    k_cache: jnp.ndarray,  # (B, S, KV, D)
+    v_cache: jnp.ndarray,  # (B, S, KV, Dv)
+    cache_len: jnp.ndarray,  # () int32 — number of valid cache rows
+    *,
+    window: int | None = None,
+) -> jnp.ndarray:
+    """Single-token decode against a (possibly ring-buffered) KV cache."""
+    B, S, KV, D = k_cache.shape
+    H = q.shape[2]
+    k = _repeat_kv(k_cache, H // KV)
+    v = _repeat_kv(v_cache, H // KV)
+    scale = 1.0 / np.sqrt(D)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    pos = jnp.arange(S)
+    valid = pos < cache_len
+    if window is not None:
+        valid &= pos >= cache_len - window
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+# --------------------------------------------------------------------------- #
+# MLPs
+# --------------------------------------------------------------------------- #
+def mlp_apply(params: dict, x: jnp.ndarray, mlp_type: str) -> jnp.ndarray:
+    if mlp_type == "swiglu":
+        gate = jax.nn.silu(x @ params["w_gate"])
+        return ((gate * (x @ params["w_in"])) @ params["w_out"]).astype(x.dtype)
+    if mlp_type == "geglu":
+        gate = jax.nn.gelu(x @ params["w_gate"], approximate=True)
+        return ((gate * (x @ params["w_in"])) @ params["w_out"]).astype(x.dtype)
+    if mlp_type == "mlp":
+        return (jax.nn.gelu(x @ params["w_in"], approximate=True)
+                @ params["w_out"]).astype(x.dtype)
+    raise ValueError(mlp_type)
+
+
+def mlp_init(key, d_model: int, d_ff: int, mlp_type: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    std_in = d_model**-0.5
+    std_out = d_ff**-0.5
+    p = {
+        "w_in": jax.random.normal(k1, (d_model, d_ff), dtype) * std_in,
+        "w_out": jax.random.normal(k2, (d_ff, d_model), dtype) * std_out,
+    }
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = jax.random.normal(k3, (d_model, d_ff), dtype) * std_in
+    return p

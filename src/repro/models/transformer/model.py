@@ -1,0 +1,310 @@
+"""Transformer LM: init / forward / train / prefill / decode across families.
+
+Layers are stacked and executed with ``jax.lax.scan`` (O(1) compile scaling in
+depth); non-uniform leading layers (DeepSeek first dense FFN) run unscanned.
+Train mode wraps the block in ``jax.checkpoint`` (full per-layer remat).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer.blocks import block_apply, block_init
+from repro.models.transformer.config import ArchConfig
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Params
+# --------------------------------------------------------------------------- #
+def init_params(key: jax.Array, cfg: ArchConfig) -> dict:
+    dtype = _dtype(cfg)
+    d, V = cfg.d_model, cfg.vocab_size
+    keys = jax.random.split(key, cfg.num_layers + 3)
+
+    nc = max(1, cfg.num_codebooks)
+    embed_shape = (nc, V, d) if cfg.num_codebooks else (V, d)
+    params: dict = {
+        "embed": jax.random.normal(keys[0], embed_shape, dtype) * d**-0.5,
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        head_out = nc * V if cfg.num_codebooks else V
+        params["lm_head"] = jax.random.normal(keys[1], (d, head_out), dtype) * d**-0.5
+
+    n_lead = cfg.first_dense_layers if cfg.family == "moe" else 0
+    lead = [
+        block_init(keys[2 + i], cfg, i, dtype) for i in range(n_lead)
+    ]
+    if lead:
+        params["lead_blocks"] = lead
+    n_scan = cfg.num_layers - n_lead
+    stacked = [
+        block_init(keys[2 + n_lead + i], cfg, n_lead + i, dtype)
+        for i in range(n_scan)
+    ]
+    params["blocks"] = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *stacked
+    )
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# Embedding / head
+# --------------------------------------------------------------------------- #
+def embed_tokens(params, cfg: ArchConfig, batch: dict) -> jnp.ndarray:
+    if cfg.num_codebooks:
+        tok = batch["tokens"]  # (B, S, nc)
+        # summed codebook embeddings: h = sum_c embed[c][tok[..., c]]
+        h = sum(
+            jnp.take(params["embed"][c], tok[..., c], axis=0)
+            for c in range(cfg.num_codebooks)
+        )
+        return h
+    h = jnp.take(params["embed"], batch["tokens"], axis=0)  # (B, S, d)
+    if cfg.num_patches and "patches" in batch:
+        h = jnp.concatenate([batch["patches"].astype(h.dtype), h], axis=1)
+    return h
+
+
+def lm_logits(params, cfg: ArchConfig, h: jnp.ndarray) -> jnp.ndarray:
+    w = params["lm_head"] if "lm_head" in params else (
+        params["embed"].T if not cfg.num_codebooks
+        else params["embed"].reshape(-1, cfg.d_model).T
+    )
+    logits = h @ w  # (B, S, nc*V) or (B, S, V)
+    if cfg.num_codebooks:
+        B, S, _ = logits.shape
+        logits = logits.reshape(B, S, cfg.num_codebooks, cfg.vocab_size)
+    return logits
+
+
+# --------------------------------------------------------------------------- #
+# Forward (train / prefill)
+# --------------------------------------------------------------------------- #
+def forward(
+    params,
+    cfg: ArchConfig,
+    batch: dict,
+    *,
+    mode: str = "train",
+    window: int | None = None,
+    unroll: bool = False,
+):
+    """Returns (logits, caches, aux). ``caches`` is None in train mode.
+
+    ``unroll=True`` replaces the layer scan with a python loop — used by the
+    dry-run's cost extrapolation (XLA:CPU cost_analysis counts a while body
+    once regardless of trip count).
+    """
+    h = embed_tokens(params, cfg, batch)
+    window = window if window is not None else cfg.attn_window
+    aux_total = jnp.zeros((), jnp.float32)
+
+    lead_caches = []
+    for p in params.get("lead_blocks", []):
+        if mode == "train" and cfg.opt_remat == "full":
+            fn = jax.checkpoint(
+                functools.partial(block_apply, cfg=cfg, mode=mode, window=window)
+            )
+            h, c, aux = fn(p, h)
+        else:
+            h, c, aux = block_apply(p, h, cfg, mode=mode, window=window)
+        aux_total = aux_total + aux
+        lead_caches.append(c)
+
+    def scan_block(h, p):
+        h, c, aux = block_apply(p, h, cfg, mode=mode, window=window)
+        return h, (c, aux)
+
+    # opt_remat="none" is a beyond-paper toggle: small models fit their
+    # activations, so full per-layer remat only adds recompute flops + bytes
+    use_remat = mode == "train" and cfg.opt_remat == "full"
+    body = jax.checkpoint(scan_block) if use_remat else scan_block
+    if unroll:
+        n_scan = jax.tree_util.tree_leaves(params["blocks"])[0].shape[0]
+        cache_list, aux_list = [], []
+        for i in range(n_scan):
+            p_i = jax.tree_util.tree_map(lambda x: x[i], params["blocks"])
+            h, (c_i, aux_i) = body(h, p_i)
+            cache_list.append(c_i)
+            aux_list.append(aux_i)
+        caches = (
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *cache_list)
+            if cache_list and cache_list[0] is not None
+            else None
+        )
+        aux_total = aux_total + sum(aux_list)
+    else:
+        h, (caches, auxes) = jax.lax.scan(body, h, params["blocks"])
+        aux_total = aux_total + auxes.sum()
+
+    from repro.models.transformer.layers import rms_norm
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params, cfg, h)
+    all_caches = None
+    if mode == "prefill":
+        all_caches = {"scan": caches}
+        if lead_caches:
+            all_caches["lead"] = lead_caches
+    return logits, all_caches, aux_total
+
+
+# --------------------------------------------------------------------------- #
+# Loss / train step
+# --------------------------------------------------------------------------- #
+def lm_loss(
+    params, cfg: ArchConfig, batch: dict, unroll: bool = False
+) -> tuple[jnp.ndarray, dict]:
+    logits, _, aux = forward(params, cfg, batch, mode="train", unroll=unroll)
+    tokens = batch["tokens"]
+    if cfg.num_codebooks:
+        tgt = tokens[:, 1:]  # (B, S-1, nc)
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+        loss = nll.mean()
+    elif cfg.num_patches:
+        # text begins after the patch prefix
+        Np = batch["patches"].shape[1]
+        text_logits = logits[:, Np:, :]
+        tgt = tokens[:, 1:]
+        lp = jax.nn.log_softmax(text_logits[:, :-1].astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+        loss = nll.mean()
+    else:
+        tgt = tokens[:, 1:]
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+        loss = nll.mean()
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def make_train_step(cfg: ArchConfig, optimizer, unroll: bool = False):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, batch, unroll=unroll), has_aux=True
+        )(params)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, unroll: bool = False):
+    def prefill_step(params, batch):
+        logits, caches, _ = forward(
+            params, cfg, batch, mode="prefill", unroll=unroll
+        )
+        return logits[:, -1:], caches
+
+    return prefill_step
+
+
+# --------------------------------------------------------------------------- #
+# Decode
+# --------------------------------------------------------------------------- #
+def init_caches(cfg: ArchConfig, batch_size: int, context_len: int):
+    """Zero caches for decoding against a ``context_len`` context.
+
+    Windowed attention uses a ring buffer of ``min(context_len, window)``
+    physical rows. Returns the same pytree structure prefill emits.
+    """
+    dtype = _dtype(cfg)
+    B = batch_size
+    S_phys = min(context_len, cfg.attn_window) if cfg.attn_window else context_len
+
+    def one_block_cache():
+        c = {}
+        if cfg.family == "ssm":
+            return {
+                "state": jnp.zeros(
+                    (B, cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_headdim),
+                    jnp.float32,
+                )
+            }
+        if cfg.use_mla:
+            attn = {
+                "c_kv": jnp.zeros((B, S_phys, cfg.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((B, S_phys, cfg.qk_rope_dim), dtype),
+            }
+        else:
+            attn = {
+                "k": jnp.zeros(
+                    (B, S_phys, cfg.num_kv_heads, cfg.head_dim), dtype
+                ),
+                "v": jnp.zeros(
+                    (B, S_phys, cfg.num_kv_heads, cfg.head_dim), dtype
+                ),
+            }
+        if cfg.family == "hybrid":
+            c["attn"] = attn
+            c["state"] = jnp.zeros(
+                (B, cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_headdim), jnp.float32
+            )
+            return c
+        return attn
+
+    n_lead = cfg.first_dense_layers if cfg.family == "moe" else 0
+    n_scan = cfg.num_layers - n_lead
+    scan_caches = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n_scan, *x.shape)), one_block_cache()
+    )
+    out = {"scan": scan_caches}
+    if n_lead:
+        out["lead"] = [one_block_cache() for _ in range(n_lead)]
+    return out
+
+
+def make_decode_step(cfg: ArchConfig, unroll: bool = False):
+    """(params, token_batch, pos, caches) -> (logits, caches). One new token."""
+
+    def decode_step(params, batch, pos, caches):
+        h = embed_tokens(params, cfg, batch)  # (B, 1, d)
+        new_lead = []
+        for p, c in zip(params.get("lead_blocks", []), caches.get("lead", [])):
+            h, c2, _ = block_apply(
+                p, h, cfg, mode="decode", cache=c, pos=pos, window=cfg.attn_window
+            )
+            new_lead.append(c2)
+
+        def scan_block(h, pc):
+            p, c = pc
+            h, c2, _ = block_apply(
+                p, h, cfg, mode="decode", cache=c, pos=pos, window=cfg.attn_window
+            )
+            return h, c2
+
+        if unroll:
+            n_scan = jax.tree_util.tree_leaves(params["blocks"])[0].shape[0]
+            outs = []
+            for i in range(n_scan):
+                pc_i = jax.tree_util.tree_map(
+                    lambda x: x[i], (params["blocks"], caches["scan"])
+                )
+                h, c_i = scan_block(h, pc_i)
+                outs.append(c_i)
+            new_scan = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+        else:
+            h, new_scan = jax.lax.scan(
+                scan_block, h, (params["blocks"], caches["scan"])
+            )
+        from repro.models.transformer.layers import rms_norm
+
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = lm_logits(params, cfg, h)
+        new_caches = {"scan": new_scan}
+        if new_lead:
+            new_caches["lead"] = new_lead
+        return logits, new_caches
+
+    return decode_step

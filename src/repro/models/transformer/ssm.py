@@ -1,0 +1,160 @@
+"""Mamba-2 SSD (state-space duality) layer [arXiv:2405.21060].
+
+Chunked training path: within-chunk attention-like dual form + cross-chunk
+recurrent state pass (one scan over S/chunk steps). Decode path: O(1)
+recurrent state update. The chunk length maps to MXU-friendly tile sizes on
+the TPU target (DESIGN.md §3).
+
+Parameterization (SSD, scalar-identity A per head):
+  x -> in_proj -> [z (gate), x, B, C, dt]  with x split into H heads of P dims
+  h_t = exp(dt*A) h_{t-1} + dt * B_t (x_t)     (state: (H, P, N))
+  y_t = C_t . h_t + D * x_t ;  out = out_proj(y * silu(z))
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ssm_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    H = cfg.ssm_nheads
+    N = cfg.ssm_state
+    G = cfg.ssm_ngroups
+    keys = jax.random.split(key, 4)
+    proj_dim = 2 * di + 2 * G * N + H  # z, x, B, C, dt
+    return {
+        "in_proj": jax.random.normal(keys[0], (d, proj_dim), dtype) * d**-0.5,
+        "out_proj": jax.random.normal(keys[1], (di, d), dtype) * di**-0.5,
+        # A in (-exp range); init log-uniform in [1, 16] as in the paper
+        "A_log": jnp.asarray(
+            np.log(np.random.default_rng(0).uniform(1, 16, H)), jnp.float32
+        ),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.asarray(
+            np.log(np.expm1(np.random.default_rng(1).uniform(1e-3, 0.1, H))),
+            jnp.float32,
+        ),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+    }
+
+
+def _split_proj(proj, cfg):
+    di = cfg.d_inner
+    G, N, H = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    z, xs, Bm, Cm, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1
+    )
+    return z, xs, Bm, Cm, dt
+
+
+def ssm_apply_train(params: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Chunked SSD forward. x: (B, S, d) -> (B, S, d)."""
+    Bsz, S, d = x.shape
+    H, P, N, G = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    Q = cfg.ssm_chunk
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    proj = x @ params["in_proj"]  # (B, S, proj)
+    z, xs, Bm, Cm, dt = _split_proj(proj, cfg)
+    xs = xs.reshape(Bsz, S, H, P)
+    Bm = Bm.reshape(Bsz, S, G, N).astype(jnp.float32)
+    Cm = Cm.reshape(Bsz, S, G, N).astype(jnp.float32)
+    # broadcast groups over heads
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)  # (B, S, H, N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    A = -jnp.exp(params["A_log"])  # (H,) negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    dA = dt * A  # (B, S, H) negative increments
+    xdt = xs.astype(jnp.float32) * dt[..., None]  # (B, S, H, P)
+
+    # chunk views
+    dA_c = dA.reshape(Bsz, nc, Q, H)
+    x_c = xdt.reshape(Bsz, nc, Q, H, P)
+    B_c = Bh.reshape(Bsz, nc, Q, H, N)
+    C_c = Ch.reshape(Bsz, nc, Q, H, N)
+
+    cum = jnp.cumsum(dA_c, axis=2)  # (B, nc, Q, H) within-chunk cumulative
+    total = cum[:, :, -1]  # (B, nc, H)
+
+    # ---- intra-chunk (dual / attention-like form) -------------------------
+    # decay(i, j) = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B, nc, Qi, Qj, H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", C_c, B_c) * L
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, x_c)
+
+    # ---- inter-chunk state scan -------------------------------------------
+    # chunk state contribution: sum_j exp(total - cum_j) B_j x_j^T
+    w = jnp.exp(total[:, :, None] - cum)  # (B, nc, Q, H)
+    state_contrib = jnp.einsum("bcjhn,bcjhp,bcjh->bchnp", B_c, x_c, w)
+
+    def scan_body(h_prev, inputs):
+        contrib, tot = inputs  # (B, H, N, P), (B, H)
+        h = h_prev * jnp.exp(tot)[:, :, None, None] + contrib
+        return h, h_prev
+
+    h0 = jnp.zeros((Bsz, H, N, P), state_contrib.dtype)
+    from repro.models.transformer import layers as _layers
+
+    if _layers.UNROLL_INNER:  # see layers.UNROLL_INNER (dry-run accounting)
+        h, before = h0, []
+        for c in range(nc):
+            h, prev = scan_body(h, (state_contrib[:, c], total[:, c]))
+            before.append(prev)
+        h_before = jnp.stack(before, axis=1)  # (B, nc, H, N, P)
+    else:
+        _, h_before = jax.lax.scan(
+            scan_body,
+            h0,
+            (jnp.moveaxis(state_contrib, 1, 0), jnp.moveaxis(total, 1, 0)),
+        )  # (nc, B, H, N, P) = state entering each chunk
+        h_before = jnp.moveaxis(h_before, 0, 1)  # (B, nc, H, N, P)
+
+    y_inter = jnp.einsum(
+        "bcihn,bchnp,bcih->bcihp", C_c, h_before, jnp.exp(cum)
+    )
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bsz, S, H * P)
+    # gated RMSNorm (Mamba-2 norm-before-out_proj)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * params["norm_scale"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return (y.astype(x.dtype) @ params["out_proj"]).astype(x.dtype)
+
+
+def ssm_apply_decode(
+    params: dict, x: jnp.ndarray, state: jnp.ndarray, cfg
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One-token recurrent step. x: (B, 1, d); state: (B, H, N, P)."""
+    Bsz = x.shape[0]
+    H, P, N, G = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    proj = x[:, 0] @ params["in_proj"]  # (B, proj)
+    z, xs, Bm, Cm, dt = _split_proj(proj, cfg)
+    xs = xs.reshape(Bsz, H, P).astype(jnp.float32)
+    rep = H // G
+    Bh = jnp.repeat(Bm.reshape(Bsz, G, N), rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm.reshape(Bsz, G, N), rep, axis=1).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B, H)
+    decay = jnp.exp(dt * A)  # (B, H)
+    # h_t = decay * h_{t-1} + dt * B ⊗ x
+    state = state * decay[:, :, None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", Bh, xs * dt[..., None]
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state)  # (B, H, P)
+    y = y + params["D"][None, :, None] * xs
+    y = y.reshape(Bsz, H * P)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * params["norm_scale"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = (y.astype(x.dtype) @ params["out_proj"])[:, None, :]
+    return out.astype(x.dtype), state

@@ -1,0 +1,23 @@
+from repro.train.optimizer import sgd, adam, adamw, OptimizerState
+from repro.train.loss import masked_softmax_xent
+from repro.train.plan_io import plan_to_device
+from repro.train.trainer import (
+    TrainConfig,
+    Trainer,
+    IterStats,
+)
+from repro.train.checkpoint import save_checkpoint, load_checkpoint
+
+__all__ = [
+    "sgd",
+    "adam",
+    "adamw",
+    "OptimizerState",
+    "masked_softmax_xent",
+    "plan_to_device",
+    "TrainConfig",
+    "Trainer",
+    "IterStats",
+    "save_checkpoint",
+    "load_checkpoint",
+]

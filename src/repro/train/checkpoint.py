@@ -1,0 +1,57 @@
+"""Checkpointing: flat-key npz of the params/opt pytree + a json manifest."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def save_checkpoint(path: str, params, step: int, extra: dict | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(params)
+    np.savez(os.path.join(path, "params.npz"), **flat)
+    manifest = {
+        "step": int(step),
+        "keys": sorted(flat.keys()),
+        "extra": extra or {},
+        "treedef": str(jax.tree_util.tree_structure(params)),
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def load_checkpoint(path: str, params_like):
+    """Restore into the structure of ``params_like`` (shape/dtype template)."""
+    data = np.load(os.path.join(path, "params.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    flat_template = _flatten(params_like)
+    assert sorted(flat_template.keys()) == manifest["keys"], "pytree mismatch"
+    leaves_by_key = {k: jnp.asarray(data[k]) for k in manifest["keys"]}
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(tree[k], f"{prefix}{k}/") for k in tree}
+        if isinstance(tree, (list, tuple)):
+            t = [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(tree)]
+            return type(tree)(t) if isinstance(tree, tuple) else t
+        return leaves_by_key[prefix.rstrip("/")]
+
+    return rebuild(params_like), manifest["step"]

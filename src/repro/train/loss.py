@@ -1,0 +1,24 @@
+"""Loss functions."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_softmax_xent(
+    logits: jnp.ndarray,  # (..., N, C)
+    labels: jnp.ndarray,  # (..., N) int32
+    mask: jnp.ndarray,  # (..., N) bool
+) -> jnp.ndarray:
+    """Mean cross-entropy over valid (mask) rows; padding rows contribute 0."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32), axis=-1)
+    nll = nll[..., 0] * mask.astype(logits.dtype)
+    denom = jnp.maximum(mask.sum(), 1)
+    return nll.sum() / denom.astype(logits.dtype)
+
+
+def masked_accuracy(logits, labels, mask):
+    pred = jnp.argmax(logits, axis=-1)
+    correct = (pred == labels) & mask
+    return correct.sum() / jnp.maximum(mask.sum(), 1)

@@ -1,0 +1,94 @@
+"""Optimizers, built in-repo (no optax dependency): SGD(+momentum), Adam, AdamW.
+
+API: ``opt = adam(lr); state = opt.init(params); params, state = opt.update(
+grads, state, params)`` — all pure pytree functions, jit/pjit-safe.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptimizerState(NamedTuple):
+    step: jnp.ndarray
+    slots: Any  # optimizer-specific pytree(s)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptimizerState]
+    update: Callable[[Any, OptimizerState, Any], tuple[Any, OptimizerState]]
+
+
+def _zeros_like_tree(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        slots = _zeros_like_tree(params) if momentum else ()
+        return OptimizerState(step=jnp.zeros((), jnp.int32), slots=slots)
+
+    def update(grads, state, params):
+        if momentum:
+            vel = jax.tree_util.tree_map(
+                lambda v, g: momentum * v + g, state.slots, grads
+            )
+            new_params = jax.tree_util.tree_map(
+                lambda p, v: p - lr * v, params, vel
+            )
+            return new_params, OptimizerState(state.step + 1, vel)
+        new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+        return new_params, OptimizerState(state.step + 1, ())
+
+    return Optimizer(init, update)
+
+
+def _adam_core(lr, b1, b2, eps, weight_decay):
+    def init(params):
+        return OptimizerState(
+            step=jnp.zeros((), jnp.int32),
+            slots={"m": _zeros_like_tree(params), "v": _zeros_like_tree(params)},
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g, state.slots["m"], grads
+        )
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * (g * g), state.slots["v"], grads
+        )
+        bc1 = 1 - b1**t
+        bc2 = 1 - b2**t
+
+        def upd(p, m_, v_):
+            mh = m_ / bc1
+            vh = v_ / bc2
+            step_ = lr * mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                step_ = step_ + lr * weight_decay * p
+            return p - step_
+
+        new_params = jax.tree_util.tree_map(upd, params, m, v)
+        return new_params, OptimizerState(step, {"m": m, "v": v})
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay=0.0)
+
+
+def adamw(
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay=weight_decay)

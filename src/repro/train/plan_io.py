@@ -1,0 +1,43 @@
+"""Host plan -> device pytree conversion and feature loading."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.splitting import SplitPlan
+
+
+def plan_to_device(plan: SplitPlan) -> dict:
+    """Convert a SplitPlan into a jit-able pytree (indices as int32)."""
+    layers = []
+    for lp in plan.layers:
+        layers.append(
+            {
+                "edge_src": jnp.asarray(lp.edge_src, jnp.int32),
+                "edge_dst": jnp.asarray(lp.edge_dst, jnp.int32),
+                "edge_mask": jnp.asarray(lp.edge_mask),
+                "send_idx": jnp.asarray(lp.send_idx, jnp.int32),
+                "self_pos": jnp.asarray(lp.self_pos, jnp.int32),
+            }
+        )
+    return {
+        "layers": layers,
+        "target_mask": jnp.asarray(plan.node_mask[0]),
+        "input_mask": jnp.asarray(plan.node_mask[-1]),
+    }
+
+
+def load_features(plan: SplitPlan, features: np.ndarray) -> np.ndarray:
+    """The *loading* phase: gather input rows per device (dedup'd under split).
+
+    Returns (P, N_L, F) float32; padding rows zeroed.
+    """
+    rows = features[plan.front_ids[-1]]  # (P, N_L, F)
+    rows = rows * plan.node_mask[-1][:, :, None]
+    return rows.astype(np.float32)
+
+
+def load_labels(plan: SplitPlan, labels: np.ndarray) -> np.ndarray:
+    """Labels of the (local) target rows per device, padding = 0."""
+    lab = labels[plan.front_ids[0]]
+    return (lab * plan.node_mask[0]).astype(np.int32)

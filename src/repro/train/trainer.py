@@ -1,0 +1,264 @@
+"""Training runtime: one trainer, three parallelism paradigms.
+
+  * ``split``     -- the paper's split parallelism: one mini-batch, split
+                     online by f_G, per-layer all-to-all shuffles.
+  * ``dp``        -- data parallelism (DGL/Quiver baseline): one micro-batch
+                     per device, redundant loads + compute, no shuffles.
+  * ``pushpull``  -- P3* hybrid: bottom layer model-parallel over feature
+                     slices + per-micro push-pull of partial activations,
+                     upper layers data-parallel. On this CPU container the
+                     numerics equal ``dp`` (the slice-sum is exact); the
+                     *communication/compute accounting* follows P3 and feeds
+                     the epoch-time model (benchmarks/epoch_time.py).
+
+All modes share one jitted step (single-device "sim" execution with a leading
+device axis P); the plan structure is the only thing that differs, mirroring
+how GSplit's layer-centric API reuses single-GPU kernels (paper §6).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.splitting import repad_plan
+from repro.core import (
+    build_dp_plan,
+    build_split_plan,
+    partition_graph,
+    presample,
+    sim_shuffle,
+)
+from repro.graph.cache import FeatureCache, LoadBreakdown
+from repro.graph.datasets import GraphDataset
+from repro.graph.sampling import NeighborSampler
+from repro.models.gnn import GNNSpec, init_gnn_params
+from repro.models.gnn.layers import gnn_forward
+from repro.train import optimizer as opt_lib
+from repro.train.loss import masked_softmax_xent, masked_accuracy
+from repro.train.plan_io import plan_to_device, load_features, load_labels
+
+
+@dataclass
+class TrainConfig:
+    mode: str = "split"  # split | dp | pushpull
+    num_devices: int = 4
+    fanouts: tuple[int, ...] = (15, 15, 15)
+    batch_size: int = 1024
+    lr: float = 1e-3
+    optimizer: str = "adam"
+    partition_method: str = "gsplit"  # split mode: gsplit | node | edge | rand
+    presample_epochs: int = 10
+    pad_multiple: int = -1  # -1 = pow2 bucketing
+    cache_mode: str = "none"  # none | distributed | partitioned
+    cache_capacity_per_device: int = 0
+    seed: int = 0
+
+
+@dataclass
+class IterStats:
+    loss: float
+    accuracy: float
+    t_sample: float
+    t_split: float
+    t_load: float
+    t_compute: float
+    loaded_rows: int
+    computed_edges: int
+    shuffle_rows: int
+    padded_edge_slots: int = 0
+    busiest_edges: int = 0
+    load_breakdown: LoadBreakdown | None = None
+    load_imbalance: float = 1.0
+    cross_edge_fraction: float = 0.0
+
+
+@dataclass
+class EpochStats:
+    iters: list[IterStats] = field(default_factory=list)
+
+    def totals(self) -> dict:
+        agg = {
+            "loss": float(np.mean([i.loss for i in self.iters])),
+            "accuracy": float(np.mean([i.accuracy for i in self.iters])),
+        }
+        for k in (
+            "t_sample",
+            "t_split",
+            "t_load",
+            "t_compute",
+            "loaded_rows",
+            "computed_edges",
+            "shuffle_rows",
+            "padded_edge_slots",
+            "busiest_edges",
+        ):
+            agg[k] = float(np.sum([getattr(i, k) for i in self.iters]))
+        agg["load_imbalance"] = float(
+            np.mean([i.load_imbalance for i in self.iters])
+        )
+        agg["cross_edge_fraction"] = float(
+            np.mean([i.cross_edge_fraction for i in self.iters])
+        )
+        if self.iters and self.iters[0].load_breakdown is not None:
+            agg["load_local_hit"] = int(
+                np.sum([i.load_breakdown.local_hit for i in self.iters])
+            )
+            agg["load_remote_hit"] = int(
+                np.sum([i.load_breakdown.remote_hit for i in self.iters])
+            )
+            agg["load_host_miss"] = int(
+                np.sum([i.load_breakdown.host_miss for i in self.iters])
+            )
+        return agg
+
+
+class Trainer:
+    """End-to-end mini-batch GNN training with the chosen parallelism."""
+
+    def __init__(self, dataset: GraphDataset, spec: GNNSpec, cfg: TrainConfig):
+        self.ds = dataset
+        self.spec = spec
+        self.cfg = cfg
+        self.sampler = NeighborSampler(
+            dataset.graph,
+            dataset.train_ids,
+            list(cfg.fanouts),
+            cfg.batch_size,
+            seed=cfg.seed,
+        )
+
+        # ---- offline stage: presample + partition (split mode) -------------
+        self.weights = None
+        self.partition = None
+        t0 = time.perf_counter()
+        if cfg.mode == "split" or cfg.cache_mode != "none":
+            self.weights = presample(
+                dataset.graph,
+                dataset.train_ids,
+                list(cfg.fanouts),
+                cfg.batch_size,
+                num_epochs=cfg.presample_epochs,
+                seed=cfg.seed + 1,
+            )
+        self.t_presample = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        if cfg.mode == "split":
+            self.partition = partition_graph(
+                dataset.graph,
+                cfg.num_devices,
+                method=cfg.partition_method,
+                weights=self.weights,
+                train_ids=dataset.train_ids,
+                seed=cfg.seed,
+            )
+        self.t_partition = time.perf_counter() - t0
+
+        self.cache = None
+        if cfg.cache_mode != "none":
+            self.cache = FeatureCache(
+                dataset.graph.num_nodes,
+                cfg.num_devices,
+                cfg.cache_capacity_per_device,
+                ranking=self.weights.vertex_weight,
+                mode=cfg.cache_mode,
+                partition_assignment=(
+                    self.partition.assignment if self.partition else None
+                ),
+            )
+
+        key = jax.random.PRNGKey(cfg.seed)
+        self.params = init_gnn_params(key, spec)
+        opt_factory = getattr(opt_lib, cfg.optimizer)
+        self.opt = opt_factory(cfg.lr)
+        self.opt_state = self.opt.init(self.params)
+        self._step_fn = self._build_step()
+        self._pad_hwm: dict = {}  # high-water-mark padding (stable jit sigs)
+
+    # ------------------------------------------------------------------ #
+    def _build_step(self):
+        spec, opt = self.spec, self.opt
+
+        def loss_fn(params, feats, plan_arrays, labels):
+            logits = gnn_forward(spec, params, feats, plan_arrays, sim_shuffle)
+            mask = plan_arrays["target_mask"]
+            loss = masked_softmax_xent(logits, labels, mask)
+            acc = masked_accuracy(logits, labels, mask)
+            return loss, acc
+
+        @jax.jit
+        def step(params, opt_state, feats, plan_arrays, labels):
+            (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, feats, plan_arrays, labels
+            )
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, loss, acc
+
+        return step
+
+    # ------------------------------------------------------------------ #
+    def _plan_for(self, targets: np.ndarray):
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        if cfg.mode in ("dp", "pushpull"):
+            samples = self.sampler.sample_micro(targets, cfg.num_devices)
+            t1 = time.perf_counter()
+            plan = build_dp_plan(samples, pad_multiple=cfg.pad_multiple)
+        else:
+            sample = self.sampler.sample(targets)
+            t1 = time.perf_counter()
+            plan = build_split_plan(
+                sample,
+                self.partition.assignment,
+                cfg.num_devices,
+                pad_multiple=cfg.pad_multiple,
+            )
+        plan = repad_plan(plan, self._pad_hwm)
+        t2 = time.perf_counter()
+        return plan, t1 - t0, t2 - t1
+
+    def train_iter(self, targets: np.ndarray) -> IterStats:
+        plan, t_sample, t_split = self._plan_for(targets)
+
+        t0 = time.perf_counter()
+        feats = load_features(plan, self.ds.features)
+        labels = load_labels(plan, self.ds.labels)
+        breakdown = self.cache.classify_plan(plan) if self.cache else None
+        t_load = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        plan_arrays = plan_to_device(plan)
+        self.params, self.opt_state, loss, acc = self._step_fn(
+            self.params, self.opt_state, jnp.asarray(feats), plan_arrays,
+            jnp.asarray(labels),
+        )
+        loss = float(loss)
+        t_compute = time.perf_counter() - t0
+
+        return IterStats(
+            loss=loss,
+            accuracy=float(acc),
+            t_sample=t_sample,
+            t_split=t_split,
+            t_load=t_load,
+            t_compute=t_compute,
+            loaded_rows=plan.loaded_feature_rows(),
+            computed_edges=plan.computed_edges(),
+            shuffle_rows=plan.shuffle_rows(),
+            padded_edge_slots=plan.padded_edge_slots(),
+            busiest_edges=plan.busiest_edges(),
+            load_breakdown=breakdown,
+            load_imbalance=plan.load_imbalance(),
+            cross_edge_fraction=plan.cross_edge_fraction(),
+        )
+
+    def train_epoch(self, max_iters: int | None = None) -> EpochStats:
+        stats = EpochStats()
+        for it, targets in enumerate(self.sampler.epoch_batches()):
+            if max_iters is not None and it >= max_iters:
+                break
+            stats.iters.append(self.train_iter(targets))
+        return stats

@@ -1,0 +1,89 @@
+"""Graph substrate: CSR, datasets, neighbor sampling invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph.csr import build_csr, to_undirected
+from repro.graph.datasets import SYNTHETIC_DATASETS, make_dataset
+from repro.graph.sampling import NeighborSampler, sample_minibatch
+
+
+def test_build_csr_roundtrip():
+    src = np.array([0, 1, 2, 2, 3])
+    dst = np.array([1, 2, 0, 3, 0])
+    g = build_csr(src, dst, 4)
+    g.validate()
+    assert g.num_edges == 5
+    assert sorted(g.neighbors(0).tolist()) == [2, 3]
+    assert g.neighbors(1).tolist() == [0]
+
+
+def test_to_undirected_dedups_and_drops_self_loops():
+    src = np.array([0, 0, 1, 2])
+    dst = np.array([1, 1, 0, 2])
+    s, d = to_undirected(src, dst)
+    pairs = set(zip(s.tolist(), d.tolist()))
+    assert pairs == {(0, 1), (1, 0)}
+
+
+@pytest.mark.parametrize("name", list(SYNTHETIC_DATASETS))
+def test_datasets_generate(name):
+    ds = make_dataset(name)
+    ds.graph.validate()
+    assert ds.features.shape == (ds.spec.num_nodes, ds.spec.feat_dim)
+    assert ds.labels.max() < ds.spec.num_classes
+    assert len(ds.train_ids) >= 1
+    # avg degree within 2x of spec (generator is stochastic + dedup'd)
+    avg = ds.graph.num_edges / ds.graph.num_nodes
+    assert avg > ds.spec.avg_degree / 4
+
+
+def test_sample_minibatch_invariants():
+    ds = make_dataset("tiny")
+    rng = np.random.default_rng(0)
+    mb = sample_minibatch(ds.graph, ds.train_ids[:32], [5, 5], rng)
+    assert mb.num_layers == 2
+    # frontiers nest: frontier[i] subset of frontier[i+1]
+    for i in range(2):
+        assert np.isin(mb.frontiers[i], mb.frontiers[i + 1]).all()
+        layer = mb.layers[i]
+        assert np.isin(layer.dst, mb.frontiers[i]).all()
+        assert np.isin(layer.src, mb.frontiers[i + 1]).all()
+        # fanout bound (plus self loops for isolated vertices)
+        per_dst = np.bincount(layer.dst, minlength=ds.graph.num_nodes)
+        assert per_dst.max() <= max(5, 1)
+    # edge ids reference real edges
+    for layer in mb.layers:
+        valid = layer.edge_id >= 0
+        assert (ds.graph.indices[layer.edge_id[valid]] == layer.src[valid]).all()
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    batch=st.integers(min_value=1, max_value=40),
+    fanout=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_sampling_fanout_property(batch, fanout, seed):
+    ds = make_dataset("tiny")
+    rng = np.random.default_rng(seed)
+    targets = rng.choice(ds.graph.num_nodes, size=batch, replace=False)
+    mb = sample_minibatch(ds.graph, targets, [fanout], rng)
+    layer = mb.layers[0]
+    deg = ds.graph.degrees()
+    for v in np.unique(layer.dst):
+        n = int((layer.dst == v).sum())
+        assert n <= max(min(deg[v], fanout), 1)
+
+
+def test_micro_vs_mini_redundancy():
+    """Table 1's phenomenon: micro-batching loads/computes more."""
+    ds = make_dataset("tiny")
+    s = NeighborSampler(ds.graph, ds.train_ids, [5, 5], batch_size=32, seed=0)
+    targets = next(iter(s.epoch_batches()))
+    mini = s.sample(targets)
+    micro = s.sample_micro(targets, 4)
+    mini_loaded = mini.input_ids.shape[0]
+    micro_loaded = sum(m.input_ids.shape[0] for m in micro)
+    assert micro_loaded >= mini_loaded
+    assert sum(m.total_edges() for m in micro) >= mini.total_edges()

@@ -1,0 +1,97 @@
+"""Partitioner (Eq. 2 heuristic) + presample properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import partition_graph
+from repro.core.presample import presample
+from repro.graph.datasets import make_dataset
+
+EPS = 0.05
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_dataset("tiny")
+    w = presample(ds.graph, ds.train_ids, [4, 4], batch_size=32, num_epochs=3)
+    return ds, w
+
+
+def test_presample_weights_shape_and_positivity(setup):
+    ds, w = setup
+    assert w.vertex_weight.shape == (ds.graph.num_nodes,)
+    assert w.edge_weight.shape == (ds.graph.num_edges,)
+    assert (w.vertex_weight >= 0).all() and (w.edge_weight >= 0).all()
+    # every training target appears at layers l>0 in every epoch it's batched
+    assert w.vertex_weight[ds.train_ids].min() > 0
+
+
+def test_presample_convergence():
+    """Law of large numbers: more epochs -> weights stabilize (§5 Analysis)."""
+    ds = make_dataset("tiny")
+    w1 = presample(ds.graph, ds.train_ids, [4], 32, num_epochs=10, seed=1)
+    w2 = presample(ds.graph, ds.train_ids, [4], 32, num_epochs=10, seed=2)
+    # normalized weight vectors from disjoint sample streams correlate highly
+    a = w1.vertex_weight / w1.vertex_weight.sum()
+    b = w2.vertex_weight / w2.vertex_weight.sum()
+    corr = np.corrcoef(a, b)[0, 1]
+    assert corr > 0.9
+
+
+@pytest.mark.parametrize("method", ["rand", "edge", "node", "gsplit"])
+def test_partition_valid_assignment(setup, method):
+    ds, w = setup
+    part = partition_graph(
+        ds.graph, 4, method=method, weights=w, train_ids=ds.train_ids, eps=EPS
+    )
+    assert part.assignment.shape == (ds.graph.num_nodes,)
+    assert part.assignment.min() >= 0 and part.assignment.max() < 4
+
+
+@pytest.mark.parametrize("method", ["edge", "node", "gsplit"])
+def test_partition_balance_constraint(setup, method):
+    ds, w = setup
+    part = partition_graph(
+        ds.graph, 4, method=method, weights=w, train_ids=ds.train_ids, eps=EPS
+    )
+    if method in ("gsplit", "node"):
+        dst = np.repeat(
+            np.arange(ds.graph.num_nodes, dtype=np.int64), ds.graph.degrees()
+        )
+        in_load = np.bincount(
+            dst, weights=w.edge_weight, minlength=ds.graph.num_nodes
+        )
+        wv = w.vertex_weight + in_load + 1e-9
+    else:
+        wv = ds.graph.degrees().astype(float) + 1.0
+    loads = part.loads(wv)
+    # LDG/refinement honor (1+eps) capacity up to one-vertex granularity
+    cap = (1 + EPS) * loads.sum() / 4 + wv.max()
+    assert loads.max() <= cap
+
+
+def test_gsplit_cut_beats_rand(setup):
+    """The paper's Fig. 5 ordering on expected cut weight."""
+    ds, w = setup
+    cuts = {}
+    for method in ["rand", "edge", "node", "gsplit"]:
+        part = partition_graph(
+            ds.graph, 4, method=method, weights=w, train_ids=ds.train_ids, seed=3
+        )
+        cuts[method] = part.cut_weight(ds.graph, w.edge_weight)
+    assert cuts["gsplit"] < cuts["rand"]
+    assert cuts["edge"] < cuts["rand"]
+    # presample-weighted min-cut <= unweighted variants on the weighted metric
+    assert cuts["gsplit"] <= cuts["node"] * 1.05
+    assert cuts["gsplit"] <= cuts["edge"] * 1.05
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    k=st.sampled_from([2, 4, 8]),
+    seed=st.integers(min_value=0, max_value=100),
+)
+def test_partition_covers_all_parts_property(k, seed):
+    ds = make_dataset("tiny")
+    part = partition_graph(ds.graph, k, method="rand", seed=seed)
+    assert set(np.unique(part.assignment)) <= set(range(k))

@@ -1,0 +1,137 @@
+"""Split-plan construction: the shuffle index must reconstruct the sample
+exactly (every edge, every self row, no redundancy)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import partition_graph
+from repro.core.presample import presample
+from repro.core.splitting import build_dp_plan, build_split_plan
+from repro.graph.datasets import make_dataset
+from repro.graph.sampling import sample_minibatch
+
+
+def _reconstruct_and_check(mb, plan):
+    """Re-derive every (src, dst) global edge through the shuffle index."""
+    P = plan.num_devices
+    for i, lp in enumerate(plan.layers):
+        n_local = plan.front_ids[i + 1].shape[1]
+        S = lp.max_send
+        got = []
+        for p in range(P):
+            for e in np.flatnonzero(lp.edge_mask[p]):
+                sp = lp.edge_src[p, e]
+                if sp < n_local:
+                    src_gid = plan.front_ids[i + 1][p, sp]
+                else:
+                    q, slot = divmod(sp - n_local, S)
+                    src_gid = plan.front_ids[i + 1][q, lp.send_idx[q, p, slot]]
+                dst_gid = plan.front_ids[i][p, lp.edge_dst[p, e]]
+                got.append((src_gid, dst_gid))
+        want = sorted(zip(mb.layers[i].src.tolist(), mb.layers[i].dst.tolist()))
+        assert sorted(got) == want, f"layer {i} edge mismatch"
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_dataset("tiny")
+    w = presample(ds.graph, ds.train_ids, [4, 4], 32, num_epochs=2)
+    part = partition_graph(ds.graph, 4, method="gsplit", weights=w, seed=0)
+    return ds, part
+
+
+def test_split_plan_reconstructs_sample(setup):
+    ds, part = setup
+    rng = np.random.default_rng(0)
+    mb = sample_minibatch(ds.graph, ds.train_ids[:32], [4, 4], rng)
+    plan = build_split_plan(mb, part.assignment, 4)
+    _reconstruct_and_check(mb, plan)
+
+
+def test_split_plan_no_redundant_loads(setup):
+    """The paper's core claim: each input vertex loaded exactly once."""
+    ds, part = setup
+    rng = np.random.default_rng(1)
+    mb = sample_minibatch(ds.graph, ds.train_ids[:32], [4, 4], rng)
+    plan = build_split_plan(mb, part.assignment, 4)
+    ids = plan.front_ids[-1][plan.node_mask[-1]]
+    assert len(np.unique(ids)) == len(ids), "a vertex was loaded twice"
+    assert plan.loaded_feature_rows() == mb.input_ids.shape[0]
+    assert plan.computed_edges() == mb.total_edges(), "redundant compute"
+
+
+def test_split_plan_owner_consistency(setup):
+    """Every local row is owned by its device per f_G (cache consistency)."""
+    ds, part = setup
+    rng = np.random.default_rng(2)
+    mb = sample_minibatch(ds.graph, ds.train_ids[:32], [4, 4], rng)
+    plan = build_split_plan(mb, part.assignment, 4)
+    for depth in range(plan.num_layers + 1):
+        for p in range(4):
+            ids = plan.front_ids[depth][p][plan.node_mask[depth][p]]
+            assert (part.assignment[ids] == p).all()
+
+
+def test_split_plan_self_positions(setup):
+    ds, part = setup
+    rng = np.random.default_rng(3)
+    mb = sample_minibatch(ds.graph, ds.train_ids[:32], [4, 4], rng)
+    plan = build_split_plan(mb, part.assignment, 4)
+    for i in range(plan.num_layers):
+        for p in range(4):
+            for j in np.flatnonzero(plan.node_mask[i][p]):
+                gid = plan.front_ids[i][p, j]
+                sp = plan.layers[i].self_pos[p, j]
+                assert plan.front_ids[i + 1][p, sp] == gid
+
+
+def test_cross_edges_bounded_by_partition_cut(setup):
+    """Sampled cross-split edges are a subset of the global cut (§5)."""
+    ds, part = setup
+    rng = np.random.default_rng(4)
+    mb = sample_minibatch(ds.graph, ds.train_ids[:32], [4, 4], rng)
+    plan = build_split_plan(mb, part.assignment, 4)
+    for i, lp in enumerate(plan.layers):
+        layer = mb.layers[i]
+        cross_true = (
+            part.assignment[layer.src] != part.assignment[layer.dst]
+        ).sum()
+        n_local = plan.front_ids[i + 1].shape[1]
+        cross_plan = int(((lp.edge_src >= n_local) & lp.edge_mask).sum())
+        assert cross_plan == cross_true
+
+
+def test_dp_plan_counts(setup):
+    ds, _ = setup
+    rng = np.random.default_rng(5)
+    targets = ds.train_ids[:32]
+    micro = [
+        sample_minibatch(ds.graph, t, [4, 4], rng)
+        for t in np.array_split(targets, 4)
+    ]
+    plan = build_dp_plan(micro)
+    assert plan.shuffle_rows() == 0
+    assert plan.loaded_feature_rows() == sum(
+        m.input_ids.shape[0] for m in micro
+    )
+    assert plan.computed_edges() == sum(m.total_edges() for m in micro)
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    num_devices=st.sampled_from([1, 2, 4, 8]),
+    fanout=st.integers(min_value=1, max_value=6),
+    batch=st.integers(min_value=2, max_value=24),
+    seed=st.integers(min_value=0, max_value=500),
+)
+def test_split_plan_property(num_devices, fanout, batch, seed):
+    """Reconstruction holds for arbitrary partitions/fanouts/batches."""
+    ds = make_dataset("tiny")
+    rng = np.random.default_rng(seed)
+    targets = rng.choice(ds.graph.num_nodes, size=batch, replace=False)
+    mb = sample_minibatch(ds.graph, targets, [fanout, fanout], rng)
+    assignment = rng.integers(0, num_devices, ds.graph.num_nodes).astype(np.int32)
+    plan = build_split_plan(mb, assignment, num_devices)
+    _reconstruct_and_check(mb, plan)
+    assert plan.computed_edges() == mb.total_edges()
+    assert plan.loaded_feature_rows() == mb.input_ids.shape[0]

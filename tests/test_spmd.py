@@ -1,0 +1,139 @@
+"""Multi-device SPMD paths (shard_map shuffles, pjit sharding rules).
+
+These spawn subprocesses with XLA_FLAGS so the main test process keeps a
+single CPU device (smoke tests must never see 512 devices).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, devices: int = 8, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=timeout,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_spmd_shuffle_matches_sim():
+    """shard_map all-to-all shuffle == simulated shuffle, fwd and grad."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.core.shuffle import sim_shuffle, spmd_shuffle
+
+        P_DEV, N, S, F = 4, 8, 3, 5
+        mesh = jax.make_mesh((P_DEV,), ("model",))
+        rng = np.random.default_rng(0)
+        h = jnp.asarray(rng.normal(size=(P_DEV, N, F)), jnp.float32)
+        send_idx = jnp.asarray(
+            rng.integers(0, N, size=(P_DEV, P_DEV, S)), jnp.int32)
+
+        ref = sim_shuffle(h, send_idx)
+
+        fn = shard_map(
+            lambda hl, si: spmd_shuffle(hl[0], si[0], "model")[None],
+            mesh=mesh,
+            in_specs=(P("model"), P("model")),
+            out_specs=P("model"),
+        )
+        got = fn(h, send_idx)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-6)
+
+        # gradients flow identically
+        def loss_sim(h):
+            return (sim_shuffle(h, send_idx) ** 2).sum()
+        def loss_spmd(h):
+            return (fn(h, send_idx) ** 2).sum()
+        g1 = jax.grad(loss_sim)(h)
+        g2 = jax.grad(loss_spmd)(h)
+        np.testing.assert_allclose(np.asarray(g2), np.asarray(g1), rtol=1e-6)
+        print("OK")
+    """)
+
+
+def test_spmd_gnn_forward_matches_sim():
+    """Full split-parallel GNN forward under shard_map == sim mode."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.graph.datasets import make_dataset
+        from repro.graph.sampling import sample_minibatch
+        from repro.core import presample, partition_graph, build_split_plan, sim_shuffle
+        from repro.models.gnn import GNNSpec, init_gnn_params
+        from repro.models.gnn.layers import gnn_forward, gnn_forward_spmd
+        from repro.train.plan_io import plan_to_device, load_features
+
+        NDEV = 4
+        ds = make_dataset("tiny")
+        rng = np.random.default_rng(0)
+        mb = sample_minibatch(ds.graph, ds.train_ids[:16], [3, 3], rng)
+        w = presample(ds.graph, ds.train_ids, [3, 3], 16, num_epochs=1)
+        part = partition_graph(ds.graph, NDEV, method="gsplit", weights=w)
+        plan = build_split_plan(mb, part.assignment, NDEV)
+        pa = plan_to_device(plan)
+        feats = jnp.asarray(load_features(plan, ds.features))
+
+        spec = GNNSpec(model="sage", in_dim=ds.spec.feat_dim, hidden_dim=16,
+                       out_dim=4, num_layers=2)
+        params = init_gnn_params(jax.random.PRNGKey(0), spec)
+
+        ref = gnn_forward(spec, params, feats, pa, sim_shuffle)
+
+        mesh = jax.make_mesh((NDEV,), ("model",))
+        def body(feats_l, pa_l):
+            pa_dev = jax.tree_util.tree_map(lambda x: x[0], pa_l)
+            out = gnn_forward_spmd(spec, params, feats_l[0], pa_dev, "model")
+            return out[None]
+        fn = shard_map(
+            body, mesh=mesh,
+            in_specs=(P("model"), P("model")),
+            out_specs=P("model"),
+            check_rep=False,
+        )
+        got = fn(feats, pa)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+        print("OK")
+    """)
+
+
+@pytest.mark.slow
+def test_dryrun_one_combo_subprocess():
+    """The dry-run driver lowers+compiles a full production combo (512 dev)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", "smollm-135m", "--shape", "decode_32k",
+            "--out", "/tmp/dryrun_test",
+        ],
+        capture_output=True, text=True, env=env, timeout=560,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "all dry-runs OK" in out.stdout
+
+
+def test_production_mesh_shapes():
+    _run("""
+        from repro.launch.mesh import make_production_mesh, data_axes
+        m1 = make_production_mesh()
+        assert m1.axis_names == ("data", "model") and m1.size == 256
+        m2 = make_production_mesh(multi_pod=True)
+        assert m2.axis_names == ("pod", "data", "model") and m2.size == 512
+        assert data_axes(m2) == ("pod", "data")
+        print("OK")
+    """, devices=512)

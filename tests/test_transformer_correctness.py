@@ -1,0 +1,296 @@
+"""Transformer numerics: flash==full attention, SSD chunked==recurrence,
+prefill+decode == train-mode forward, MoE routing sanity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.transformer.config import ArchConfig
+from repro.models.transformer.layers import (
+    attention_decode,
+    attention_flash,
+    attention_full,
+)
+from repro.models.transformer.model import (
+    forward,
+    init_caches,
+    init_params,
+    make_decode_step,
+    make_prefill_step,
+)
+from repro.models.transformer.moe import moe_apply, moe_init
+from repro.models.transformer.ssm import (
+    _split_proj,
+    ssm_apply_decode,
+    ssm_apply_train,
+    ssm_init,
+)
+
+
+def test_flash_matches_full_attention():
+    key = jax.random.PRNGKey(0)
+    B, S, H, KV, D = 2, 4096, 4, 2, 32
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, D), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, D), jnp.float32)
+    full = attention_full(q, k, v, causal=True)
+    flash = attention_flash(q, k, v, chunk=512)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_windowed_matches_full():
+    key = jax.random.PRNGKey(3)
+    B, S, H, D = 1, 2048, 2, 16
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(4), (B, S, H, D), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(5), (B, S, H, D), jnp.float32)
+    full = attention_full(q, k, v, causal=True, window=512)
+    flash = attention_flash(q, k, v, chunk=256, window=512)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def _ssm_cfg():
+    return ArchConfig(
+        name="t", family="ssm", num_layers=1, d_model=32, vocab_size=64,
+        ssm_state=8, ssm_expand=2, ssm_headdim=16, ssm_chunk=4, ssm_ngroups=1,
+    )
+
+
+def test_ssd_chunked_matches_recurrence():
+    cfg = _ssm_cfg()
+    params = ssm_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, 32), jnp.float32) * 0.5
+    y_chunk = ssm_apply_train(params, x, cfg)
+
+    # token-by-token recurrence via the decode path
+    H, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    state = jnp.zeros((B, H, N, P), jnp.float32)
+    outs = []
+    for t in range(S):
+        o, state = ssm_apply_decode(params, x[:, t : t + 1], state, cfg)
+        outs.append(o[:, 0])
+    y_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_chunk),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "family,extra",
+    [
+        ("dense", dict(num_heads=4, num_kv_heads=2, head_dim=16, d_ff=64)),
+        ("moe", dict(num_heads=4, num_kv_heads=4, head_dim=16, use_mla=True,
+                     kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+                     v_head_dim=16, num_experts=4, num_shared_experts=1,
+                     moe_top_k=2, moe_d_ff=32, first_dense_layers=1,
+                     first_dense_d_ff=64,
+                     # ample capacity: prefill (B*S tokens) and decode (B
+                     # tokens) must drop the same set — i.e. nothing
+                     moe_capacity_factor=8.0)),
+        ("hybrid", dict(num_heads=4, num_kv_heads=2, head_dim=16, d_ff=64,
+                        ssm_state=8, ssm_expand=2, ssm_headdim=16,
+                        ssm_chunk=4)),
+        ("ssm", dict(ssm_state=8, ssm_expand=2, ssm_headdim=16, ssm_chunk=4)),
+    ],
+)
+def test_prefill_then_decode_matches_train_forward(family, extra):
+    """Teacher-forced decode after prefill reproduces the full forward."""
+    cfg = ArchConfig(
+        name="t", family=family, num_layers=2, d_model=64, vocab_size=97,
+        dtype="float32", **extra,
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 4), 0, 97)
+
+    logits_train, _, _ = forward(params, cfg, {"tokens": toks}, mode="train")
+
+    prefill = make_prefill_step(cfg)
+    decode = make_decode_step(cfg)
+    logits_last, caches = prefill(params, {"tokens": toks[:, :S]})
+    np.testing.assert_allclose(
+        np.asarray(logits_last[:, 0]), np.asarray(logits_train[:, S - 1]),
+        rtol=2e-3, atol=2e-3,
+    )
+    # SSM caches from prefill need concrete shapes matching decode; the
+    # decode cache for attention families is the ring buffer we init:
+    caches = jax.tree_util.tree_map(jnp.asarray, caches)
+    if family in ("dense", "moe", "hybrid"):
+        # decode caches have seq axis sized S+4; prefill emitted S rows —
+        # embed them at positions [0, S)
+        full = init_caches(cfg, B, S + 4)
+
+        def embed_cache(dst, src):
+            if dst.shape == src.shape:
+                return src.astype(dst.dtype)
+            # find the (single) axis that differs = the seq axis
+            axis = [i for i, (a, b) in enumerate(zip(dst.shape, src.shape))
+                    if a != b][0]
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), 0, axis=axis
+            )
+
+        caches = jax.tree_util.tree_map(embed_cache, full, caches)
+
+    for t in range(4):
+        pos = jnp.int32(S + t)
+        logits, caches = decode(params, {"tokens": toks[:, S + t : S + t + 1]},
+                                pos, caches)
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(logits_train[:, S + t]),
+            rtol=2e-2, atol=2e-2,
+        )
+
+
+def test_moe_routes_to_topk_experts():
+    cfg = ArchConfig(
+        name="t", family="moe", num_layers=1, d_model=16, vocab_size=32,
+        num_experts=4, moe_top_k=2, moe_d_ff=8, num_shared_experts=0,
+        moe_capacity_factor=4.0,  # no drops
+        mlp_type="swiglu",
+    )
+    params = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16), jnp.float32)
+    out, aux = moe_apply(params, x, cfg)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(aux) > 0
+
+    # with ample capacity, output must equal the dense top-k reference
+    gates = jax.nn.softmax(x.reshape(-1, 16) @ params["router"], axis=-1)
+    topw, tope = jax.lax.top_k(gates, 2)
+    topw = topw / topw.sum(-1, keepdims=True)
+    xt = x.reshape(-1, 16)
+    ref = jnp.zeros_like(xt)
+    for e in range(4):
+        gate = jax.nn.silu(xt @ params["w_gate"][e])
+        hid = gate * (xt @ params["w_in"][e])
+        ye = hid @ params["w_out"][e]
+        wsel = jnp.where(tope == e, topw, 0.0).sum(-1)
+        ref = ref + ye * wsel[:, None]
+    np.testing.assert_allclose(
+        np.asarray(out.reshape(-1, 16)), np.asarray(ref), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_moe_capacity_drops_tokens_gracefully():
+    cfg = ArchConfig(
+        name="t", family="moe", num_layers=1, d_model=16, vocab_size=32,
+        num_experts=4, moe_top_k=2, moe_d_ff=8, num_shared_experts=1,
+        moe_capacity_factor=0.25,  # force drops
+        mlp_type="swiglu",
+    )
+    params = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 16), jnp.float32)
+    out, _ = moe_apply(params, x, cfg)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_decode_ring_buffer_windowed():
+    """Windowed ring cache ignores evicted rows exactly like a full cache
+    with a window mask."""
+    key = jax.random.PRNGKey(0)
+    B, H, D, W, T = 1, 2, 16, 8, 20
+    ks = jax.random.normal(key, (B, T, H, D), jnp.float32)
+    vs = jax.random.normal(jax.random.PRNGKey(1), (B, T, H, D), jnp.float32)
+    q = jax.random.normal(jax.random.PRNGKey(2), (B, 1, H, D), jnp.float32)
+
+    # full cache + window mask at final step
+    full_out = attention_decode(
+        q, ks, vs, jnp.int32(T), window=W
+    )
+    # ring buffer of W rows holding the last W tokens (arbitrary rotation)
+    ring_k = jnp.zeros((B, W, H, D))
+    ring_v = jnp.zeros((B, W, H, D))
+    for t in range(T):
+        slot = t % W
+        ring_k = ring_k.at[:, slot].set(ks[:, t])
+        ring_v = ring_v.at[:, slot].set(vs[:, t])
+    ring_out = attention_decode(
+        q, ring_k, ring_v, jnp.int32(min(T, W)), window=None
+    )
+    np.testing.assert_allclose(np.asarray(ring_out), np.asarray(full_out),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mla_absorb_decode_equivalent():
+    """§Perf pair B: latent-space (absorbed) MLA decode == expanded decode."""
+    from repro.models.transformer.blocks import attn_init, mla_apply
+
+    cfg = ArchConfig(
+        name="t", family="moe", num_layers=1, d_model=64, vocab_size=97,
+        num_heads=4, num_kv_heads=4, head_dim=0, use_mla=True,
+        kv_lora_rank=32, q_lora_rank=0, qk_nope_dim=16, qk_rope_dim=8,
+        v_head_dim=16, num_experts=4, moe_top_k=2, moe_d_ff=32,
+        dtype="float32",
+    )
+    p = attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 1, 64))
+    cache = {
+        "c_kv": jax.random.normal(jax.random.PRNGKey(2), (B, S, 32)),
+        "k_rope": jax.random.normal(jax.random.PRNGKey(3), (B, S, 8)),
+    }
+    out1, _ = mla_apply(p, x, cfg, mode="decode", cache=cache, pos=jnp.int32(7))
+    cfg2 = dataclasses.replace(cfg, opt_mla_absorb=True)
+    out2, _ = mla_apply(p, x, cfg2, mode="decode", cache=cache, pos=jnp.int32(7))
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_flash_unrolled_matches_scan():
+    """UNROLL_INNER (dry-run accounting mode) is numerically identical."""
+    from repro.models.transformer import layers as L
+
+    key = jax.random.PRNGKey(0)
+    B, S, H, D = 1, 2048, 2, 16
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, D), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, D), jnp.float32)
+    ref = L.attention_flash(q, k, v, chunk=512)
+    L.UNROLL_INNER = True
+    try:
+        got = L.attention_flash(q, k, v, chunk=512)
+    finally:
+        L.UNROLL_INNER = False
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_moe_shard_map_matches_pjit_subprocess():
+    """§Perf A4: expert-local shard_map dispatch == global pjit dispatch."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = textwrap.dedent("""
+        import dataclasses, jax, jax.numpy as jnp, numpy as np
+        from repro.models.transformer.config import ArchConfig
+        from repro.models.transformer.moe import moe_apply, moe_init
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        jax.set_mesh(mesh)
+        cfg = ArchConfig(name="t", family="moe", num_layers=1, d_model=16,
+                         vocab_size=32, num_experts=8, moe_top_k=2, moe_d_ff=8,
+                         num_shared_experts=1, moe_capacity_factor=8.0,
+                         mlp_type="swiglu", dtype="float32")
+        params = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 16), jnp.float32)
+        ref, _ = jax.jit(lambda p, x: moe_apply(p, x, cfg))(params, x)
+        cfg2 = dataclasses.replace(cfg, opt_moe_shard_map=True)
+        got, _ = jax.jit(lambda p, x: moe_apply(p, x, cfg2))(params, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-5)
+        print("OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=560)
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout
