@@ -1,0 +1,111 @@
+"""Pipelined vs serial executor: steady-state step time + queue occupancy.
+
+The paper's cooperative pipeline (§5) overlaps host-side plan production
+(sampling, online splitting, feature loading) with device compute, so the
+steady-state step time drops from ``host + compute`` toward
+``max(host, compute)``. This benchmark measures that directly on the CPU
+container: same model, same seed, same batches — only ``plan_source``
+differs — and reports per-step wall time after the pipeline-fill first
+iteration, plus the prefetch queue's occupancy and the plan-signature cache
+hit rate (DESIGN.md §6). Serial-vs-pipelined *numerics* are covered by
+tests/test_runtime.py; this file covers the *time*.
+
+Methodology notes for a noisy shared container:
+
+  * serial and pipelined epochs run *alternately* (paired rounds), so slow
+    machine phases hit both arms.
+  * per-arm step time is the minimum over rounds of
+    ``EpochStats.steady_step_seconds()`` (first iteration excluded — it
+    contains jit tracing in the warmup epoch and queue fill afterwards).
+    The min is each arm's least-disturbed epoch, the closest observable to
+    its true steady-state rate on a machine with bursty background load;
+    the headline speedup is the ratio of the two mins, with the median of
+    per-round paired ratios reported alongside.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.graph.datasets import make_dataset
+from repro.models.gnn import GNNSpec
+from repro.train.trainer import TrainConfig, Trainer
+
+NUM_DEVICES = 4
+FANOUTS = (15, 15, 15)
+ROUNDS = 5
+
+# Per-mode scale: the overlap win is host_time bounded by compute_time, and
+# the two modes sit at very different host/compute balances (dp's redundant
+# loads make its host side ~5x heavier). Each mode is measured at a scale
+# where both arms run long enough per step to be steady on a small noisy
+# container: batch sized so one epoch has 6-8 batches to pipeline across
+# (819 train targets).
+MODE_SCALE = {
+    "split": dict(batch_size=96, hidden=64),
+    "dp": dict(batch_size=128, hidden=128),
+    "pushpull": dict(batch_size=128, hidden=128),
+}
+
+
+def run(modes=("split", "dp"), dataset="orkut-s") -> list[Row]:
+    ds = make_dataset(dataset)
+    rows = []
+    for mode in modes:
+        scale = MODE_SCALE[mode]
+        spec = GNNSpec(
+            model="sage", in_dim=ds.spec.feat_dim, hidden_dim=scale["hidden"],
+            out_dim=ds.spec.num_classes, num_layers=3, num_heads=4,
+        )
+        trainers = {}
+        for source in ("serial", "pipelined"):
+            cfg = TrainConfig(
+                mode=mode, num_devices=NUM_DEVICES, fanouts=FANOUTS,
+                batch_size=scale["batch_size"], presample_epochs=2, seed=0,
+                plan_source=source, pipeline_depth=2, plan_workers=1,
+            )
+            trainers[source] = Trainer(ds, spec, cfg)
+            trainers[source].train_epoch()  # compile + HWM/signature warmup
+
+        best = {"serial": float("inf"), "pipelined": float("inf")}
+        ratios = []
+        qstats: dict = {}
+        host_ms = 0.0
+        for _ in range(ROUNDS):
+            step = {}
+            for source, tr in trainers.items():  # alternate: paired rounds
+                st = tr.train_epoch()
+                step[source] = st.steady_step_seconds()
+                best[source] = min(best[source], step[source])
+                if source == "pipelined":
+                    qstats = st.pipeline or qstats
+                else:
+                    tot, n = st.totals(), len(st.iters)
+                    host_ms = (
+                        (tot["t_sample"] + tot["t_split"] + tot["t_load"])
+                        / n * 1e3
+                    )
+            ratios.append(step["serial"] / step["pipelined"])
+        paired_median = sorted(ratios)[len(ratios) // 2]
+        speedup = best["serial"] / best["pipelined"]
+
+        rows.append(
+            Row(
+                f"pipeline/{dataset}/{mode}/serial",
+                best["serial"] * 1e6,
+                f"steady step={best['serial']*1e3:.1f}ms "
+                f"host(sample+split+load)={host_ms:.1f}ms",
+            )
+        )
+        rows.append(
+            Row(
+                f"pipeline/{dataset}/{mode}/pipelined",
+                best["pipelined"] * 1e6,
+                f"steady step={best['pipelined']*1e3:.1f}ms "
+                f"speedup={speedup:.2f}x "
+                f"median_paired_speedup={paired_median:.2f}x "
+                f"mean_occupancy={qstats.get('mean_occupancy', 0.0):.2f} "
+                f"max_occupancy={qstats.get('max_occupancy', 0)} "
+                f"consumer_waits={qstats.get('consumer_waits', 0)} "
+                f"sig_hit_rate={qstats.get('hit_rate', 0.0):.3f}",
+            )
+        )
+    return rows

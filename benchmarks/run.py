@@ -1,7 +1,7 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Select subsets with
-``python -m benchmarks.run [table1] [table3] [fig5] [presample] [kernels]
+``python -m benchmarks.run [table1] [table3] [pipeline] [fig5] [presample] [kernels]
 [transformer] [roofline]``.
 """
 from __future__ import annotations
@@ -14,6 +14,7 @@ BENCHES = {
     "fig5": ("benchmarks.fig5_partition_quality", "Fig. 5 — partitioner quality"),
     "presample": ("benchmarks.presample_cost", "§7.3 — splitting algorithm cost"),
     "table3": ("benchmarks.table3_epoch_time", "Table 3 — epoch time breakdown"),
+    "pipeline": ("benchmarks.pipeline_bench", "§5 — pipelined vs serial executor"),
     "kernels": ("benchmarks.kernel_bench", "Pallas kernels vs oracle"),
     "transformer": ("benchmarks.transformer_bench", "Assigned archs (reduced)"),
     "roofline": ("benchmarks.roofline_report", "Roofline from dry-run records"),

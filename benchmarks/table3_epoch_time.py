@@ -105,7 +105,7 @@ def run(models=("sage", "gat"), dataset="orkut-s") -> list[Row]:
             t_fb = fb_for(rate_cpu)
             total = t_sample + t_load + t_fb
             # paper-regime: V100 kernel rate makes loading vs compute weights
-            # match the paper's testbed (DESIGN.md §3)
+            # match the paper's testbed (DESIGN.md §7)
             t_fb_v = fb_for(V100_EDGE_RATE.get(model, 1e-8))
             total_v = t_load + t_fb_v  # GPU sampling ~ small, omitted
             rows.append(

@@ -23,6 +23,7 @@ def main() -> None:
         batch_size=64,
         partition_method="gsplit",  # presample-weighted min-cut (§5)
         presample_epochs=5,
+        plan_source="serial",  # "pipelined": overlap plan building w/ compute
         lr=5e-3,
     )
     trainer = Trainer(ds, spec, cfg)

@@ -6,6 +6,7 @@ from repro.core.splitting import (
     LayerPlan,
     build_split_plan,
     build_dp_plan,
+    repad_plan,
 )
 from repro.core.shuffle import sim_shuffle, spmd_shuffle, segment_mean, segment_sum
 
@@ -18,6 +19,7 @@ __all__ = [
     "LayerPlan",
     "build_split_plan",
     "build_dp_plan",
+    "repad_plan",
     "sim_shuffle",
     "spmd_shuffle",
     "segment_mean",

@@ -15,6 +15,7 @@ sufficient (§7.3); that is our default.
 """
 from __future__ import annotations
 
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 
 import numpy as np
@@ -36,6 +37,15 @@ class PresampleWeights:
         return float(self.vertex_weight.sum())
 
 
+def _accumulate(k_v: np.ndarray, k_e: np.ndarray, mb) -> None:
+    # layers l > 0 are all non-input frontiers: frontiers[0..L-1]
+    for frontier in mb.frontiers[:-1]:
+        np.add.at(k_v, frontier, 1)
+    for layer in mb.layers:
+        eids = layer.edge_id[layer.edge_id >= 0]
+        np.add.at(k_e, eids, 1)
+
+
 def presample(
     graph: CSRGraph,
     train_ids: np.ndarray,
@@ -43,19 +53,41 @@ def presample(
     batch_size: int,
     num_epochs: int = 10,
     seed: int = 0,
+    workers: int = 1,
 ) -> PresampleWeights:
-    k_v = np.zeros(graph.num_nodes, dtype=np.int64)
-    k_e = np.zeros(graph.num_edges, dtype=np.int64)
+    """Accumulate k_v / k_e over ``num_epochs`` of simulated sampling.
+
+    ``workers == 1`` replays the historical single-generator stream.
+    ``workers > 1`` parallelizes across epochs with the sampler's keyed RNG
+    API — each epoch's draws depend only on ``(seed, epoch, batch)``, so the
+    result is deterministic and independent of scheduling (integer counts
+    summed per worker, no shared mutable state). Both paths are individually
+    reproducible, but they draw *different* streams: flipping the knob
+    changes the weights (hence the partition and downstream trajectories).
+    Keep it fixed within any experiment being compared.
+    """
     sampler = NeighborSampler(graph, train_ids, fanouts, batch_size, seed=seed)
-    for _ in range(num_epochs):
-        for targets in sampler.epoch_batches():
-            mb = sampler.sample(targets)
-            # layers l > 0 are all non-input frontiers: frontiers[0..L-1]
-            for frontier in mb.frontiers[:-1]:
-                np.add.at(k_v, frontier, 1)
-            for layer in mb.layers:
-                eids = layer.edge_id[layer.edge_id >= 0]
-                np.add.at(k_e, eids, 1)
+    if workers <= 1:
+        k_v = np.zeros(graph.num_nodes, dtype=np.int64)
+        k_e = np.zeros(graph.num_edges, dtype=np.int64)
+        for _ in range(num_epochs):
+            for targets in sampler.epoch_batches():
+                _accumulate(k_v, k_e, sampler.sample(targets))
+    else:
+        def one_epoch(epoch: int):
+            ev = np.zeros(graph.num_nodes, dtype=np.int64)
+            ee = np.zeros(graph.num_edges, dtype=np.int64)
+            for idx, targets in enumerate(sampler.epoch_targets(epoch)):
+                _accumulate(ev, ee, sampler.sample_batch(targets, epoch, idx))
+            return ev, ee
+
+        with ThreadPoolExecutor(max_workers=workers) as pool:
+            parts = list(pool.map(one_epoch, range(num_epochs)))
+        k_v = np.zeros(graph.num_nodes, dtype=np.int64)
+        k_e = np.zeros(graph.num_edges, dtype=np.int64)
+        for ev, ee in parts:
+            k_v += ev
+            k_e += ee
     n = float(num_epochs)
     return PresampleWeights(
         vertex_weight=k_v / n, edge_weight=k_e / n, num_epochs=num_epochs

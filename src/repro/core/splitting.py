@@ -357,6 +357,12 @@ def repad_plan(plan: SplitPlan, hwm: dict) -> SplitPlan:
     Keeps the jitted step's shape signature stable across iterations: after
     the first few batches every plan reuses the same compiled executable
     (padding rows/edges are masked, so numerics are unchanged).
+
+    The ``hwm`` dict is *order-sensitive* shared state: which batch first
+    raises a mark determines every later batch's padded shapes. The runtime
+    therefore applies it on the ordered (delivery) side of the prefetch
+    queue, never in producer threads — see ``runtime.plan_source._finalize``
+    and DESIGN.md §6.
     """
 
     def pad_to(a, axis, size):

@@ -64,14 +64,17 @@ class FeatureCache:
             raise ValueError(f"unknown cache mode {mode!r}")
 
     def classify_plan(self, plan: SplitPlan) -> LoadBreakdown:
-        """Count where each required input-feature row would be served from."""
-        local = remote = miss = 0
-        ids = plan.front_ids[-1]
+        """Count where each required input-feature row would be served from.
+
+        Pure reads over static tables (vectorized over the whole (P, N_L)
+        block), so the pipelined runtime may call it from any producer
+        thread without locking.
+        """
+        ids = plan.front_ids[-1]  # (P, N_L)
         mask = plan.node_mask[-1]
-        for p in range(plan.num_devices):
-            v = ids[p][mask[p]]
-            where = self.cached_on[v]
-            local += int((where == p).sum())
-            remote += int(((where >= 0) & (where != p)).sum())
-            miss += int((where < 0).sum())
+        where = self.cached_on[ids]  # (P, N_L)
+        dev = np.arange(ids.shape[0], dtype=np.int32)[:, None]
+        local = int(((where == dev) & mask).sum())
+        remote = int(((where >= 0) & (where != dev) & mask).sum())
+        miss = int(((where < 0) & mask).sum())
         return LoadBreakdown(local_hit=local, remote_hit=remote, host_miss=miss)

@@ -137,6 +137,16 @@ class NeighborSampler:
     Table 1 "Mini"); ``mode='micro'`` samples ``num_devices`` independent
     micro-batches of ``batch_size // num_devices`` (data parallelism /
     Table 1 "Micro").
+
+    Two RNG disciplines coexist:
+
+      * the legacy *streamed* API (``epoch_batches`` / ``sample`` /
+        ``sample_micro``) advances one shared generator in call order, and
+      * the *keyed* API (``epoch_targets`` / ``sample_batch`` /
+        ``sample_micro_batch``) derives an independent generator from
+        ``(seed, epoch, batch)``, so any thread can sample any batch and get
+        the same draws — the contract the pipelined runtime needs for
+        serial-equals-pipelined determinism (DESIGN.md §6).
     """
 
     def __init__(
@@ -151,17 +161,25 @@ class NeighborSampler:
         self.train_ids = np.asarray(train_ids, dtype=np.int64)
         self.fanouts = list(fanouts)
         self.batch_size = batch_size
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
 
-    def epoch_batches(self, drop_last: bool = True):
-        ids = self.rng.permutation(self.train_ids)
+    def _slice_batches(
+        self, ids: np.ndarray, drop_last: bool
+    ) -> list[np.ndarray]:
         n = ids.shape[0]
         if n <= self.batch_size:
-            yield ids  # fewer targets than a batch: one (short) batch
-            return
+            return [ids]  # fewer targets than a batch: one (short) batch
         stop = n - (n % self.batch_size) if drop_last else n
-        for i in range(0, stop, self.batch_size):
-            yield ids[i : i + self.batch_size]
+        return [
+            ids[i : i + self.batch_size]
+            for i in range(0, stop, self.batch_size)
+        ]
+
+    def epoch_batches(self, drop_last: bool = True):
+        yield from self._slice_batches(
+            self.rng.permutation(self.train_ids), drop_last
+        )
 
     def sample(self, targets: np.ndarray) -> MiniBatchSample:
         return sample_minibatch(self.graph, targets, self.fanouts, self.rng)
@@ -170,3 +188,34 @@ class NeighborSampler:
         """Data-parallel micro-batching: partition targets, sample independently."""
         parts = np.array_split(targets, num_devices)
         return [self.sample(p) for p in parts]
+
+    # ---- keyed API: order-independent draws for the pipelined runtime ---- #
+    def _keyed_rng(self, *key: int) -> np.random.Generator:
+        return np.random.default_rng((self.seed, *key))
+
+    def epoch_targets(
+        self, epoch: int, drop_last: bool = True
+    ) -> list[np.ndarray]:
+        """The epoch's target batches as a list, permuted by ``(seed, epoch)``."""
+        return self._slice_batches(
+            self._keyed_rng(0x9E7, epoch).permutation(self.train_ids), drop_last
+        )
+
+    def sample_batch(
+        self, targets: np.ndarray, epoch: int, batch: int
+    ) -> MiniBatchSample:
+        """Sample one mini-batch with draws keyed by ``(seed, epoch, batch)``."""
+        rng = self._keyed_rng(0x5A3, epoch, batch)
+        return sample_minibatch(self.graph, targets, self.fanouts, rng)
+
+    def sample_micro_batch(
+        self, targets: np.ndarray, num_devices: int, epoch: int, batch: int
+    ) -> list[MiniBatchSample]:
+        """Keyed counterpart of ``sample_micro`` (one rng per micro-batch)."""
+        parts = np.array_split(targets, num_devices)
+        return [
+            sample_minibatch(
+                self.graph, p, self.fanouts, self._keyed_rng(0x5A3, epoch, batch, i)
+            )
+            for i, p in enumerate(parts)
+        ]

@@ -1,0 +1,31 @@
+"""Pipelined split-parallel execution runtime (paper §5, "cooperative
+pipelining"; DESIGN.md §6).
+
+Decouples host-side plan production (sampling -> online split -> shuffle
+index -> feature load) from the jitted train step behind the ``PlanSource``
+interface, with a bounded in-order prefetch queue and a plan-signature cache
+for compiled-executable reuse tracking.
+"""
+from repro.runtime.plan_source import (
+    PipelinedPlanSource,
+    PlanBatch,
+    PlanProducer,
+    PlanSource,
+    SerialPlanSource,
+    make_plan_source,
+)
+from repro.runtime.prefetch import OrderedPrefetcher, PrefetchStats
+from repro.runtime.signature import SignatureCache, plan_signature
+
+__all__ = [
+    "OrderedPrefetcher",
+    "PrefetchStats",
+    "PipelinedPlanSource",
+    "PlanBatch",
+    "PlanProducer",
+    "PlanSource",
+    "SerialPlanSource",
+    "SignatureCache",
+    "make_plan_source",
+    "plan_signature",
+]

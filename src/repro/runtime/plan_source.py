@@ -1,0 +1,260 @@
+"""Plan sources: who builds the per-iteration ``SplitPlan`` and when.
+
+GSplit's cooperative pipeline (paper §5) overlaps the host-side stages of
+mini-batch ``k+1`` (sampling, online splitting, feature loading) with the
+device compute of mini-batch ``k``. This module factors the host side out of
+the trainer behind one interface:
+
+  * ``SerialPlanSource``     -- build each batch inline on the consumer
+    thread, exactly like the pre-pipeline trainer. The reference for
+    determinism tests.
+  * ``PipelinedPlanSource``  -- a multi-worker producer pool builds batches
+    ahead of the consumer through ``OrderedPrefetcher``; a bounded reorder
+    queue keeps delivery in epoch order.
+
+Both sources derive one RNG stream *per batch* from ``(seed, epoch, index)``
+(see ``NeighborSampler.sample_batch``), so their sampled batches are
+identical regardless of which thread runs the sampler. Padding to the
+running high-water marks (``repad_plan``) is applied at *delivery* time, on
+the ordered side of the queue, so padded shapes — and therefore jit
+signatures and float trajectories — are bit-for-bit identical between the
+two sources.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.splitting import (
+    SplitPlan,
+    build_dp_plan,
+    build_split_plan,
+    repad_plan,
+)
+from repro.graph.cache import FeatureCache, LoadBreakdown
+from repro.graph.sampling import NeighborSampler
+from repro.runtime.prefetch import OrderedPrefetcher
+from repro.runtime.signature import SignatureCache, plan_signature
+
+# NOTE: repro.train.plan_io is imported lazily inside PlanProducer.build —
+# repro.train's package __init__ imports the trainer, which imports this
+# package, so a module-level import here would be circular.
+
+
+@dataclass
+class PlanBatch:
+    """One fully-staged mini-batch: plan + host feature/label blocks."""
+
+    index: int
+    epoch: int
+    plan: SplitPlan
+    feats: np.ndarray  # (P, N_L, F) float32, padding rows zeroed
+    labels: np.ndarray  # (P, N_0) int32, padding zeroed
+    breakdown: LoadBreakdown | None
+    t_sample: float
+    t_split: float
+    t_load: float
+    signature: tuple = ()
+    sig_hit: bool = False
+
+
+class PlanProducer:
+    """Builds one ``PlanBatch``: sample -> online split -> feature load.
+
+    Stateless across batches apart from read-only references (graph, feature
+    matrix, partition assignment, cache tables), so any thread may build any
+    batch. High-water-mark repadding is deliberately *not* done here — it is
+    order-sensitive and belongs on the ordered side of the queue
+    (``_finalize``).
+    """
+
+    def __init__(
+        self,
+        sampler: NeighborSampler,
+        features: np.ndarray,
+        labels: np.ndarray,
+        mode: str,
+        num_devices: int,
+        pad_multiple: int,
+        assignment: np.ndarray | None = None,
+        cache: FeatureCache | None = None,
+    ):
+        if mode not in ("split", "dp", "pushpull"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if mode == "split" and assignment is None:
+            raise ValueError("split mode needs a partition assignment")
+        self.sampler = sampler
+        self.features = features
+        self.labels = labels
+        self.mode = mode
+        self.num_devices = num_devices
+        self.pad_multiple = pad_multiple
+        self.assignment = assignment
+        self.cache = cache
+
+    def build(self, epoch: int, index: int, targets: np.ndarray) -> PlanBatch:
+        from repro.train.plan_io import load_features, load_labels
+
+        t0 = time.perf_counter()
+        if self.mode in ("dp", "pushpull"):
+            samples = self.sampler.sample_micro_batch(
+                targets, self.num_devices, epoch, index
+            )
+            t1 = time.perf_counter()
+            plan = build_dp_plan(samples, pad_multiple=self.pad_multiple)
+        else:
+            sample = self.sampler.sample_batch(targets, epoch, index)
+            t1 = time.perf_counter()
+            plan = build_split_plan(
+                sample,
+                self.assignment,
+                self.num_devices,
+                pad_multiple=self.pad_multiple,
+            )
+        t2 = time.perf_counter()
+        feats = load_features(plan, self.features)
+        labels = load_labels(plan, self.labels)
+        breakdown = self.cache.classify_plan(plan) if self.cache else None
+        t3 = time.perf_counter()
+        return PlanBatch(
+            index=index,
+            epoch=epoch,
+            plan=plan,
+            feats=feats,
+            labels=labels,
+            breakdown=breakdown,
+            t_sample=t1 - t0,
+            t_split=t2 - t1,
+            t_load=t3 - t2,
+        )
+
+
+def _pad_axis1(a: np.ndarray, size: int) -> np.ndarray:
+    if a.shape[1] >= size:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[1] = (0, size - a.shape[1])
+    return np.pad(a, widths)
+
+
+def _finalize(
+    batch: PlanBatch, hwm: dict, sig_cache: SignatureCache | None
+) -> PlanBatch:
+    """Order-sensitive delivery step: repad to high-water marks, pad the
+    staged feature/label blocks to match, and record the jit signature."""
+    t0 = time.perf_counter()
+    repad_plan(batch.plan, hwm)
+    batch.feats = _pad_axis1(batch.feats, batch.plan.front_ids[-1].shape[1])
+    batch.labels = _pad_axis1(batch.labels, batch.plan.front_ids[0].shape[1])
+    batch.t_split += time.perf_counter() - t0
+    batch.signature = plan_signature(batch.plan)
+    if sig_cache is not None:
+        batch.sig_hit = sig_cache.record(batch.signature)
+    return batch
+
+
+class PlanSource:
+    """Iterable of ``PlanBatch`` for one epoch. Subclasses choose *where*
+    the producer work runs; delivery order and contents are identical."""
+
+    def __iter__(self) -> Iterator[PlanBatch]:
+        raise NotImplementedError
+
+    def close(self) -> None:  # pragma: no cover - overridden when stateful
+        pass
+
+    def stats(self) -> dict:
+        return {}
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+@dataclass
+class SerialPlanSource(PlanSource):
+    """Inline plan construction on the consumer thread (today's behavior)."""
+
+    producer: PlanProducer
+    epoch: int
+    batches: list
+    hwm: dict
+    sig_cache: SignatureCache | None = None
+
+    def __iter__(self) -> Iterator[PlanBatch]:
+        for idx, targets in enumerate(self.batches):
+            yield _finalize(
+                self.producer.build(self.epoch, idx, targets),
+                self.hwm,
+                self.sig_cache,
+            )
+
+    def stats(self) -> dict:
+        return dict(self.sig_cache.as_dict()) if self.sig_cache else {}
+
+
+@dataclass
+class PipelinedPlanSource(PlanSource):
+    """Multi-worker lookahead plan construction behind a bounded queue."""
+
+    producer: PlanProducer
+    epoch: int
+    batches: list
+    hwm: dict
+    sig_cache: SignatureCache | None = None
+    depth: int = 4
+    workers: int = 2
+    _prefetcher: OrderedPrefetcher | None = field(
+        default=None, repr=False, compare=False
+    )
+
+    def __iter__(self) -> Iterator[PlanBatch]:
+        batches = list(self.batches)
+
+        def build(idx: int) -> PlanBatch:
+            return self.producer.build(self.epoch, idx, batches[idx])
+
+        self._prefetcher = OrderedPrefetcher(
+            build, len(batches), depth=self.depth, workers=self.workers
+        )
+        try:
+            for batch in self._prefetcher:
+                yield _finalize(batch, self.hwm, self.sig_cache)
+        finally:
+            self.close()
+
+    def close(self) -> None:
+        if self._prefetcher is not None:
+            self._prefetcher.close()
+
+    def stats(self) -> dict:
+        out = {}
+        if self._prefetcher is not None:
+            out.update(self._prefetcher.stats.as_dict())
+        if self.sig_cache is not None:
+            out.update(self.sig_cache.as_dict())
+        return out
+
+
+def make_plan_source(
+    kind: str,
+    producer: PlanProducer,
+    epoch: int,
+    batches: list,
+    hwm: dict,
+    sig_cache: SignatureCache | None = None,
+    depth: int = 4,
+    workers: int = 2,
+) -> PlanSource:
+    if kind == "serial":
+        return SerialPlanSource(producer, epoch, batches, hwm, sig_cache)
+    if kind == "pipelined":
+        return PipelinedPlanSource(
+            producer, epoch, batches, hwm, sig_cache, depth, workers
+        )
+    raise ValueError(f"unknown plan source {kind!r} (serial | pipelined)")

@@ -1,0 +1,154 @@
+"""Bounded, order-preserving prefetch executor for host-side plan work.
+
+The producer side of the pipeline (sampling -> online split -> feature load)
+is embarrassingly parallel across mini-batches once each batch derives its
+own RNG stream, but the *consumer* (the jitted train step) must receive
+batches in epoch order so optimizer updates match serial execution exactly.
+``OrderedPrefetcher`` therefore runs ``fn(index)`` on a small thread pool,
+holds completed items in a reorder buffer, and hands them out strictly by
+index. A ticket semaphore bounds how far the producers may run ahead
+(``depth`` outstanding items), which bounds host memory for staged feature
+blocks.
+
+Worker exceptions are captured and re-raised at the *delivery point* of the
+failing index, so the consumer sees the error exactly where the batch would
+have been, and ``close()`` (also called by ``__exit__`` and on consumer-side
+errors) always leaves the pool joined and the queue drained.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+
+@dataclass
+class PrefetchStats:
+    """Occupancy/wait counters for one prefetcher lifetime."""
+
+    delivered: int = 0
+    occupancy_sum: int = 0  # reorder-buffer size summed at each delivery
+    consumer_waits: int = 0  # deliveries that blocked on an unfinished batch
+    occupancy_max: int = 0
+    samples: list = field(default_factory=list)
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.occupancy_sum / self.delivered if self.delivered else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "delivered": self.delivered,
+            "mean_occupancy": self.mean_occupancy,
+            "max_occupancy": self.occupancy_max,
+            "consumer_waits": self.consumer_waits,
+        }
+
+
+class OrderedPrefetcher:
+    """Run ``fn(i)`` for ``i in range(num_items)`` on ``workers`` threads,
+    delivering results in index order with at most ``depth`` in flight."""
+
+    def __init__(
+        self,
+        fn: Callable[[int], Any],
+        num_items: int,
+        depth: int = 4,
+        workers: int = 2,
+    ):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        self._fn = fn
+        self._num_items = num_items
+        self._tickets = threading.Semaphore(depth)
+        self._lock = threading.Condition()
+        self._buffer: dict[int, tuple[Any, BaseException | None]] = {}
+        self._next_claim = 0
+        self._stop = threading.Event()
+        self.stats = PrefetchStats()
+        self._threads = [
+            threading.Thread(
+                target=self._work, name=f"plan-producer-{w}", daemon=True
+            )
+            for w in range(min(workers, max(num_items, 1)))
+        ]
+        for t in self._threads:
+            t.start()
+
+    # ------------------------------------------------------------------ #
+    def _claim(self) -> int:
+        with self._lock:
+            if self._next_claim >= self._num_items:
+                return -1
+            idx = self._next_claim
+            self._next_claim += 1
+            return idx
+
+    def _work(self) -> None:
+        while not self._stop.is_set():
+            self._tickets.acquire()
+            if self._stop.is_set():
+                break
+            idx = self._claim()
+            if idx < 0:
+                # let fellow workers observe exhaustion too
+                self._tickets.release()
+                break
+            try:
+                result, err = self._fn(idx), None
+            except BaseException as e:  # noqa: BLE001 - delivered to consumer
+                result, err = None, e
+            with self._lock:
+                self._buffer[idx] = (result, err)
+                self._lock.notify_all()
+
+    # ------------------------------------------------------------------ #
+    def __iter__(self):
+        try:
+            for idx in range(self._num_items):
+                with self._lock:
+                    if idx not in self._buffer:
+                        self.stats.consumer_waits += 1
+                    while idx not in self._buffer:
+                        if self._stop.is_set():
+                            raise RuntimeError("prefetcher closed mid-iteration")
+                        self._lock.wait(timeout=0.1)
+                    self.stats.occupancy_sum += len(self._buffer)
+                    self.stats.occupancy_max = max(
+                        self.stats.occupancy_max, len(self._buffer)
+                    )
+                    self.stats.delivered += 1
+                    result, err = self._buffer.pop(idx)
+                # free the ticket before (possibly) raising so close() never
+                # deadlocks on a full queue
+                self._tickets.release()
+                if err is not None:
+                    raise err
+                yield result
+        finally:
+            self.close()
+
+    # ------------------------------------------------------------------ #
+    def close(self) -> None:
+        """Stop producers and join them. Idempotent."""
+        self._stop.set()
+        # unblock any worker parked on the ticket semaphore
+        for _ in self._threads:
+            self._tickets.release()
+        with self._lock:
+            self._lock.notify_all()
+        for t in self._threads:
+            t.join(timeout=10.0)
+        self._threads = [t for t in self._threads if t.is_alive()]
+
+    @property
+    def closed(self) -> bool:
+        return self._stop.is_set() and not self._threads
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

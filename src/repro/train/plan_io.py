@@ -27,14 +27,33 @@ def plan_to_device(plan: SplitPlan) -> dict:
     }
 
 
+def stage_batch(
+    plan: SplitPlan, feats: np.ndarray, labels: np.ndarray
+) -> tuple:
+    """Host -> device transfer of one staged batch (plan + features + labels).
+
+    One call site for the transfer keeps the double-buffering window in the
+    trainer explicit: staging batch ``k+1`` can be issued while the step for
+    batch ``k`` is still in flight.
+    """
+    return (
+        jnp.asarray(feats),
+        plan_to_device(plan),
+        jnp.asarray(labels, jnp.int32),
+    )
+
+
 def load_features(plan: SplitPlan, features: np.ndarray) -> np.ndarray:
     """The *loading* phase: gather input rows per device (dedup'd under split).
 
     Returns (P, N_L, F) float32; padding rows zeroed.
     """
-    rows = features[plan.front_ids[-1]]  # (P, N_L, F)
-    rows = rows * plan.node_mask[-1][:, :, None]
-    return rows.astype(np.float32)
+    rows = features[plan.front_ids[-1]].astype(np.float32, copy=False)
+    # zero only the padded rows (they gather vertex 0's features) instead of
+    # multiplying the whole block by the mask — the padded fraction is small,
+    # so this roughly halves the memory traffic of the loading stage
+    rows[~plan.node_mask[-1]] = 0.0
+    return rows
 
 
 def load_labels(plan: SplitPlan, labels: np.ndarray) -> np.ndarray:

@@ -2,6 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests degrade to skips without it
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.edge_softmax.ops import edge_softmax_pallas

@@ -261,6 +261,10 @@ def test_flash_unrolled_matches_scan():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.skipif(
+    not hasattr(jax, "set_mesh"),
+    reason="subprocess uses jax.set_mesh (not in the pinned jax)",
+)
 def test_moe_shard_map_matches_pjit_subprocess():
     """§Perf A4: expert-local shard_map dispatch == global pjit dispatch."""
     import os
