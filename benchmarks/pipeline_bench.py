@@ -1,4 +1,4 @@
-"""Pipelined vs serial executor: steady-state step time + queue occupancy.
+"""Pipelined vs serial executor + cache serving: steady-state step time.
 
 The paper's cooperative pipeline (§5) overlaps host-side plan production
 (sampling, online splitting, feature loading) with device compute, so the
@@ -10,10 +10,17 @@ iteration, plus the prefetch queue's occupancy and the plan-signature cache
 hit rate (DESIGN.md §6). Serial-vs-pipelined *numerics* are covered by
 tests/test_runtime.py; this file covers the *time*.
 
+The ``cached`` arm (split mode) additionally serves input features from the
+partition-consistent device-resident cache (§2.2, DESIGN.md §2): the host
+gather shrinks to the compacted miss rows, and the arm's column reports the
+hit rate, the host rows/bytes avoided vs the uncached arm, and a numerics
+check (the cached warmup epoch must walk the exact float trajectory of the
+uncached one — serving is bit-exact, not approximate).
+
 Methodology notes for a noisy shared container:
 
-  * serial and pipelined epochs run *alternately* (paired rounds), so slow
-    machine phases hit both arms.
+  * all arms of a mode run *alternately* (paired rounds), so slow machine
+    phases hit every arm.
   * per-arm step time is the minimum over rounds of
     ``EpochStats.steady_step_seconds()`` (first iteration excluded — it
     contains jit tracing in the warmup epoch and queue fill afterwards).
@@ -30,7 +37,6 @@ from repro.models.gnn import GNNSpec
 from repro.train.trainer import TrainConfig, Trainer
 
 NUM_DEVICES = 4
-FANOUTS = (15, 15, 15)
 ROUNDS = 5
 
 # Per-mode scale: the overlap win is host_time bounded by compute_time, and
@@ -40,48 +46,78 @@ ROUNDS = 5
 # container: batch sized so one epoch has 6-8 batches to pipeline across
 # (819 train targets).
 MODE_SCALE = {
-    "split": dict(batch_size=96, hidden=64),
-    "dp": dict(batch_size=128, hidden=128),
-    "pushpull": dict(batch_size=128, hidden=128),
+    "split": dict(batch_size=96, hidden=64, fanouts=(15, 15, 15)),
+    "dp": dict(batch_size=128, hidden=128, fanouts=(15, 15, 15)),
+    "pushpull": dict(batch_size=128, hidden=128, fanouts=(15, 15, 15)),
 }
+SMOKE_SCALE = dict(batch_size=32, hidden=16, fanouts=(4, 4))
 
 
-def run(modes=("split", "dp"), dataset="orkut-s") -> list[Row]:
+def _trainer(ds, spec, mode, scale, source, cache_mode="none", cache_cap=0):
+    cfg = TrainConfig(
+        mode=mode, num_devices=NUM_DEVICES, fanouts=scale["fanouts"],
+        batch_size=scale["batch_size"], presample_epochs=2, seed=0,
+        plan_source=source, pipeline_depth=2, plan_workers=1,
+        cache_mode=cache_mode, cache_capacity_per_device=cache_cap,
+    )
+    return Trainer(ds, spec, cfg)
+
+
+def run(modes=("split", "dp"), dataset="orkut-s", rounds=ROUNDS,
+        smoke=False) -> list[Row]:
     ds = make_dataset(dataset)
     rows = []
     for mode in modes:
-        scale = MODE_SCALE[mode]
+        scale = SMOKE_SCALE if smoke else MODE_SCALE[mode]
         spec = GNNSpec(
             model="sage", in_dim=ds.spec.feat_dim, hidden_dim=scale["hidden"],
-            out_dim=ds.spec.num_classes, num_layers=3, num_heads=4,
+            out_dim=ds.spec.num_classes, num_layers=len(scale["fanouts"]),
+            num_heads=4,
         )
-        trainers = {}
-        for source in ("serial", "pipelined"):
-            cfg = TrainConfig(
-                mode=mode, num_devices=NUM_DEVICES, fanouts=FANOUTS,
-                batch_size=scale["batch_size"], presample_epochs=2, seed=0,
-                plan_source=source, pipeline_depth=2, plan_workers=1,
+        trainers = {
+            "serial": _trainer(ds, spec, mode, scale, "serial"),
+            "pipelined": _trainer(ds, spec, mode, scale, "pipelined"),
+        }
+        if mode == "split":
+            # GSplit's partition-consistent cache, ~50% of vertices cacheable
+            trainers["cached"] = _trainer(
+                ds, spec, mode, scale, "pipelined",
+                cache_mode="partitioned",
+                cache_cap=ds.graph.num_nodes // (2 * NUM_DEVICES),
             )
-            trainers[source] = Trainer(ds, spec, cfg)
-            trainers[source].train_epoch()  # compile + HWM/signature warmup
 
-        best = {"serial": float("inf"), "pipelined": float("inf")}
+        warm = {}
+        for source, tr in trainers.items():
+            warm[source] = tr.train_epoch()  # compile + HWM/signature warmup
+        if "cached" in warm:
+            # serving must be numerically exact, not approximate
+            plain = [(i.loss, i.accuracy) for i in warm["pipelined"].iters]
+            cached = [(i.loss, i.accuracy) for i in warm["cached"].iters]
+            assert cached == plain, "cache serving drifted from host gather"
+
+        best = {name: float("inf") for name in trainers}
+        counts: dict = {}  # summed over all rounds (each round = one epoch)
         ratios = []
         qstats: dict = {}
         host_ms = 0.0
-        for _ in range(ROUNDS):
+        for _ in range(rounds):
             step = {}
             for source, tr in trainers.items():  # alternate: paired rounds
                 st = tr.train_epoch()
                 step[source] = st.steady_step_seconds()
                 best[source] = min(best[source], step[source])
+                acc = counts.setdefault(source, {})
+                tot = st.totals()
+                for k in ("loaded_rows", "load_local_hit",
+                          "load_remote_hit", "load_host_miss"):
+                    if k in tot:
+                        acc[k] = acc.get(k, 0) + int(tot[k])
                 if source == "pipelined":
                     qstats = st.pipeline or qstats
-                else:
-                    tot, n = st.totals(), len(st.iters)
+                elif source == "serial":
                     host_ms = (
                         (tot["t_sample"] + tot["t_split"] + tot["t_load"])
-                        / n * 1e3
+                        / len(st.iters) * 1e3
                     )
             ratios.append(step["serial"] / step["pipelined"])
         paired_median = sorted(ratios)[len(ratios) // 2]
@@ -108,4 +144,49 @@ def run(modes=("split", "dp"), dataset="orkut-s") -> list[Row]:
                 f"sig_hit_rate={qstats.get('hit_rate', 0.0):.3f}",
             )
         )
+        if "cached" in trainers:
+            tot = counts["cached"]  # summed over every measured epoch
+            loaded = int(tot["loaded_rows"])
+            miss = int(tot["load_host_miss"])
+            hits = int(tot["load_local_hit"] + tot["load_remote_hit"])
+            avoided_mb = (loaded - miss) * ds.spec.feat_dim * 4 / 1e6
+            assert miss < loaded, "cache served nothing — placement broken?"
+            rows.append(
+                Row(
+                    f"pipeline/{dataset}/{mode}/cached",
+                    best["cached"] * 1e6,
+                    f"steady step={best['cached']*1e3:.1f}ms "
+                    f"vs_uncached={best['pipelined']/best['cached']:.2f}x "
+                    f"hit_rate={hits/max(loaded, 1):.3f} "
+                    f"host_rows={miss}/{loaded} "
+                    f"host_MB_avoided={avoided_mb:.1f} "
+                    f"numerics=exact",
+                )
+            )
     return rows
+
+
+def main() -> None:
+    """CLI entry; ``--smoke`` is the CI drift check (1 tiny round)."""
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny dataset, 1 round: fails on numeric/cache drift")
+    ap.add_argument("--dataset", default=None)
+    ap.add_argument("--modes", nargs="+", default=None)
+    ap.add_argument("--rounds", type=int, default=None)
+    args = ap.parse_args()
+    dataset = args.dataset or ("tiny" if args.smoke else "orkut-s")
+    modes = tuple(args.modes) if args.modes else (
+        ("split",) if args.smoke else ("split", "dp")
+    )
+    rounds = args.rounds or (1 if args.smoke else ROUNDS)
+    print("name,us_per_call,derived")
+    for row in run(modes=modes, dataset=dataset, rounds=rounds,
+                   smoke=args.smoke):
+        print(row.csv(), flush=True)
+
+
+if __name__ == "__main__":
+    main()

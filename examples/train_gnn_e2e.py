@@ -18,6 +18,19 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--dataset", default="orkut-s")
     ap.add_argument("--ckpt", default="/tmp/gsplit_ckpt")
+    ap.add_argument(
+        "--cache-mode", default="partitioned",
+        choices=["none", "partitioned", "distributed"],
+        help="feature-cache placement for the split trainer (§2.2)",
+    )
+    ap.add_argument(
+        "--cache-capacity", type=int, default=None,
+        help="cached rows per device (default: num_nodes // 8)",
+    )
+    ap.add_argument(
+        "--no-cache-serve", action="store_true",
+        help="accounting-only cache (full host gather, pre-serving behavior)",
+    )
     args = ap.parse_args()
 
     ds = make_dataset(args.dataset)
@@ -33,10 +46,15 @@ def main() -> None:
         num_devices=4, fanouts=(10, 10, 10),
         batch_size=min(256, len(ds.train_ids)),
         presample_epochs=5, lr=2e-3,
-        cache_capacity_per_device=ds.graph.num_nodes // 8,
+        cache_capacity_per_device=(
+            args.cache_capacity
+            if args.cache_capacity is not None
+            else ds.graph.num_nodes // 8
+        ),
+        cache_serve=not args.no_cache_serve,
     )
     split_tr = Trainer(
-        ds, spec, TrainConfig(mode="split", cache_mode="partitioned", **base)
+        ds, spec, TrainConfig(mode="split", cache_mode=args.cache_mode, **base)
     )
     dp_tr = Trainer(ds, spec, TrainConfig(mode="dp", cache_mode="distributed",
                                           **base))

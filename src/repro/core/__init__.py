@@ -8,7 +8,14 @@ from repro.core.splitting import (
     build_dp_plan,
     repad_plan,
 )
-from repro.core.shuffle import sim_shuffle, spmd_shuffle, segment_mean, segment_sum
+from repro.core.shuffle import (
+    sim_shuffle,
+    spmd_shuffle,
+    sim_serve_features,
+    spmd_serve_features,
+    segment_mean,
+    segment_sum,
+)
 
 __all__ = [
     "PresampleWeights",
@@ -22,6 +29,8 @@ __all__ = [
     "repad_plan",
     "sim_shuffle",
     "spmd_shuffle",
+    "sim_serve_features",
+    "spmd_serve_features",
     "segment_mean",
     "segment_sum",
 ]

@@ -1,4 +1,4 @@
-"""Device-side shuffle primitives (the ``shuffle`` of Algorithm 2).
+"""Device-side shuffle and cache-serving primitives (Algorithm 2 + §2.2).
 
 Two execution modes with identical math:
 
@@ -56,6 +56,93 @@ def spmd_shuffle(
     recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0)
     # all_to_all with split/concat 0 yields (P, S, F): recv[q] = peer q's block
     return jnp.concatenate([h_local, recv.reshape(P * S, -1)], axis=0)
+
+
+def _scatter_add_rows(
+    block: jnp.ndarray, rows: jnp.ndarray, pos: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Scatter ``rows`` (masked) into ``block`` at ``pos`` by addition.
+
+    Valid positions are written by exactly one source and start at 0.0, so
+    the add is exact; masked (padding) rows contribute 0.0 at row 0 — also
+    exact. This is what makes the served feature block bit-identical to a
+    full host gather regardless of padding widths.
+    """
+    return block.at[pos].add(rows * mask[:, None].astype(rows.dtype))
+
+
+def sim_serve_features(
+    cache_block: jnp.ndarray, cplan: dict, miss_feats: jnp.ndarray
+) -> jnp.ndarray:
+    """Assemble the input-feature block from the resident cache (sim mode).
+
+    cache_block -- (P, C, F) device-resident rows (trainer setup, static)
+    cplan       -- device arrays of a ``graph.cache.CachePlan``
+    miss_feats  -- (P, M, F) host-gathered miss rows (padding rows zeroed)
+    returns     -- (P, N_L, F), bit-identical to ``plan_io.load_features``
+    """
+    P, _, F = cache_block.shape
+    local_slot = cplan["local_slot"]  # (P, N)
+    feats = jnp.take_along_axis(cache_block, local_slot[:, :, None], axis=1)
+    feats = feats * cplan["local_mask"][:, :, None].astype(feats.dtype)
+    Sc = cplan["send_slot"].shape[-1]
+    if Sc:
+        # remote hits ride the same all-to-all as the layer shuffles: gather
+        # the (P, P, Sc, F) send buffer from owner blocks, transpose the
+        # (owner, needer) axes, scatter into needer positions
+        send = jnp.take_along_axis(
+            cache_block[:, None, :, :], cplan["send_slot"][:, :, :, None], axis=2
+        )  # (P_owner, P_needer, Sc, F)
+        recv = jnp.swapaxes(send, 0, 1)  # (P_needer, P_owner, Sc, F)
+        feats = jax.vmap(_scatter_add_rows)(
+            feats,
+            recv.reshape(P, -1, F),
+            cplan["recv_pos"].reshape(P, -1),
+            cplan["recv_mask"].reshape(P, -1),
+        )
+    if miss_feats.shape[1]:
+        feats = jax.vmap(_scatter_add_rows)(
+            feats, miss_feats, cplan["miss_pos"], cplan["miss_mask"]
+        )
+    return feats
+
+
+def spmd_serve_features(
+    cache_local: jnp.ndarray,
+    cplan_local: dict,
+    miss_feats_local: jnp.ndarray,
+    axis_name: str,
+) -> jnp.ndarray:
+    """shard_map-mode feature serving (runs inside a `shard_map` body).
+
+    cache_local      -- (C, F) this device's resident block
+    cplan_local      -- per-device CachePlan slices (leading P axis removed;
+                        ``send_slot`` keeps its needer axis, ``recv_pos`` /
+                        ``recv_mask`` their owner axis — both (P, Sc))
+    miss_feats_local -- (M, F) this device's host-gathered miss rows
+    returns          -- (N_L, F) served input rows
+    """
+    local_mask = cplan_local["local_mask"]
+    feats = cache_local[cplan_local["local_slot"]]
+    feats = feats * local_mask[:, None].astype(feats.dtype)
+    P, Sc = cplan_local["send_slot"].shape
+    if Sc:
+        send = cache_local[cplan_local["send_slot"]]  # (P, Sc, F)
+        recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0)
+        feats = _scatter_add_rows(
+            feats,
+            recv.reshape(P * Sc, -1),
+            cplan_local["recv_pos"].reshape(-1),
+            cplan_local["recv_mask"].reshape(-1),
+        )
+    if miss_feats_local.shape[0]:
+        feats = _scatter_add_rows(
+            feats,
+            miss_feats_local,
+            cplan_local["miss_pos"],
+            cplan_local["miss_mask"],
+        )
+    return feats
 
 
 def segment_mean(

@@ -34,6 +34,20 @@ import numpy as np
 from repro.graph.sampling import MiniBatchSample
 
 
+def pad_axis(a: np.ndarray, axis: int, size: int) -> np.ndarray:
+    """Grow one axis to ``size`` with trailing zeros (no-op if big enough).
+
+    The single masked-padding primitive behind all HWM repadding — plans,
+    cache plans, and staged host blocks must pad identically for the
+    jit-signature machinery to converge.
+    """
+    if a.shape[axis] >= size:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, size - a.shape[axis])
+    return np.pad(a, widths)
+
+
 def _roundup(x: int, m: int) -> int:
     """Pad ``x`` up. ``m > 0``: next multiple of m. ``m == -1``: power-of-two
     bucketing (min 16) — bounds the number of distinct jit signatures per
@@ -58,6 +72,13 @@ class LayerPlan:
     send_idx: np.ndarray  # (P, P, S) int32: [owner q, needer p, slot]
     send_count: np.ndarray  # (P, P) int32 true (unpadded) send sizes
     self_pos: np.ndarray  # (P, N_i) int32: local row at depth i+1 of each dst
+    # Width of the local region of the mixed buffer that ``edge_src`` remote
+    # entries (``n_local + q*S + slot``) are currently relative to. Set at
+    # build time; ``repad_plan`` rebases the entries and keeps this in sync
+    # whenever padding grows the local region or the send width S
+    # (DESIGN.md §3, mixed-buffer offset invariant). Required — a wrong
+    # value silently corrupts every repadded plan.
+    n_local: int
 
     @property
     def max_send(self) -> int:
@@ -120,11 +141,13 @@ class SplitPlan:
     def cross_edge_fraction(self) -> float:
         """Cross-split edges / total edges (paper Fig. 5 metric)."""
         total = self.computed_edges()
-        # an edge is cross-split iff its src addresses the recv region
+        # an edge is cross-split iff its src addresses the recv region; the
+        # boundary is the layer's recorded n_local (== the current front
+        # width only because repad keeps the two in sync — using the front
+        # shape directly undercounted on repadded plans)
         cross = 0
-        for i, l in enumerate(self.layers):
-            n_local = self.front_ids[i + 1].shape[1]
-            cross += int(((l.edge_src >= n_local) & l.edge_mask).sum())
+        for l in self.layers:
+            cross += int(((l.edge_src >= l.n_local) & l.edge_mask).sum())
         return cross / total if total else 0.0
 
 
@@ -259,6 +282,7 @@ def build_split_plan(
                 send_idx=send_idx,
                 send_count=send_count,
                 self_pos=self_pos,
+                n_local=n_local,
             )
         )
 
@@ -332,6 +356,7 @@ def build_dp_plan(
                 send_idx=np.zeros((P, P, 0), dtype=np.int32),
                 send_count=np.zeros((P, P), dtype=np.int32),
                 self_pos=self_pos,
+                n_local=front_size[i + 1],
             )
         )
 
@@ -365,27 +390,37 @@ def repad_plan(plan: SplitPlan, hwm: dict) -> SplitPlan:
     and DESIGN.md §6.
     """
 
-    def pad_to(a, axis, size):
-        if a.shape[axis] >= size:
-            return a
-        widths = [(0, 0)] * a.ndim
-        widths[axis] = (0, size - a.shape[axis])
-        return np.pad(a, widths)
-
     for d in range(plan.num_layers + 1):
         key = f"N{d}"
         hwm[key] = max(hwm.get(key, 0), plan.front_ids[d].shape[1])
-        plan.front_ids[d] = pad_to(plan.front_ids[d], 1, hwm[key])
-        plan.node_mask[d] = pad_to(plan.node_mask[d], 1, hwm[key])
+        plan.front_ids[d] = pad_axis(plan.front_ids[d], 1, hwm[key])
+        plan.node_mask[d] = pad_axis(plan.node_mask[d], 1, hwm[key])
     for i, lp in enumerate(plan.layers):
         ek = f"E{i}"
         hwm[ek] = max(hwm.get(ek, 0), lp.edge_src.shape[1])
-        lp.edge_src = pad_to(lp.edge_src, 1, hwm[ek])
-        lp.edge_dst = pad_to(lp.edge_dst, 1, hwm[ek])
-        lp.edge_mask = pad_to(lp.edge_mask, 1, hwm[ek])
+        lp.edge_src = pad_axis(lp.edge_src, 1, hwm[ek])
+        lp.edge_dst = pad_axis(lp.edge_dst, 1, hwm[ek])
+        lp.edge_mask = pad_axis(lp.edge_mask, 1, hwm[ek])
         sk = f"S{i}"
-        hwm[sk] = max(hwm.get(sk, 0), lp.send_idx.shape[2])
-        lp.send_idx = pad_to(lp.send_idx, 2, hwm[sk])
+        old_s = lp.send_idx.shape[2]
+        hwm[sk] = max(hwm.get(sk, 0), old_s)
+        new_s = hwm[sk]
+        # Remote edge_src entries encode ``n_local + q*S + slot`` against the
+        # pre-repad layout. Growing the local region (N_{i+1}) or the send
+        # width (S) moves the recv region, so rebase them onto the new layout
+        # — otherwise they address zeroed padding rows and split-mode
+        # aggregation silently drops every cross-split edge.
+        old_n = lp.n_local
+        new_n = plan.front_ids[i + 1].shape[1]  # already padded to hwm[N{i+1}]
+        if old_s > 0 and (new_n != old_n or new_s != old_s):
+            remote = lp.edge_src >= old_n
+            if remote.any():
+                q, slot = np.divmod(
+                    lp.edge_src[remote].astype(np.int64) - old_n, old_s
+                )
+                lp.edge_src[remote] = (new_n + q * new_s + slot).astype(np.int32)
+        lp.n_local = new_n
+        lp.send_idx = pad_axis(lp.send_idx, 2, new_s)
         nk = f"N{i}"
-        lp.self_pos = pad_to(lp.self_pos, 1, hwm[nk])
+        lp.self_pos = pad_axis(lp.self_pos, 1, hwm[nk])
     return plan

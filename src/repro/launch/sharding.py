@@ -147,6 +147,22 @@ def cache_specs(cfg: ArchConfig, cache_shapes, mesh) -> dict:
     return jax.tree_util.tree_map_with_path(build, cache_shapes)
 
 
+def split_cache_specs(cache_arrays) -> dict:
+    """GNN split-parallel cache serving: shard on the leading device axis.
+
+    The (P, C, F) resident feature-cache block and every ``CachePlan`` array
+    carry the split/device dimension first (`owner` for ``send_slot``,
+    `needer` for ``recv_pos``/``recv_mask``, the device itself for the
+    rest), so under SPMD they all shard over the mesh's ``model`` axis on
+    axis 0 and the per-shard slices are exactly what
+    ``core.shuffle.spmd_serve_features`` consumes.
+    """
+    return jax.tree_util.tree_map(
+        lambda leaf: P(*(("model",) + (None,) * (leaf.ndim - 1))),
+        cache_arrays,
+    )
+
+
 def named(tree_specs, mesh):
     """PartitionSpec tree -> NamedSharding tree."""
     from jax.sharding import NamedSharding

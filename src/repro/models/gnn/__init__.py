@@ -3,6 +3,13 @@ from repro.models.gnn.layers import (
     init_gnn_params,
     gnn_layer_apply,
     gnn_forward,
+    gnn_forward_cached,
 )
 
-__all__ = ["GNNSpec", "init_gnn_params", "gnn_layer_apply", "gnn_forward"]
+__all__ = [
+    "GNNSpec",
+    "init_gnn_params",
+    "gnn_layer_apply",
+    "gnn_forward",
+    "gnn_forward_cached",
+]

@@ -164,16 +164,48 @@ def gnn_forward(
     return h
 
 
+def gnn_forward_cached(
+    spec: GNNSpec,
+    params: list[dict],
+    cache_block: jnp.ndarray,  # (P, C, F) device-resident feature cache
+    miss_feats: jnp.ndarray,  # (P, M, F) host-gathered cache-miss rows
+    plan_arrays: dict,  # plan pytree incl. the "cache" serving recipe
+    shuffle_fn,
+) -> jnp.ndarray:
+    """Split-parallel forward with the loading stage folded into the step.
+
+    Instead of consuming a pre-gathered (P, N_L, F) block, the input
+    features are assembled on device from the resident cache block plus the
+    compacted miss rows (``core.shuffle.sim_serve_features``) — numerically
+    identical to ``gnn_forward(load_features(...))`` but the host link only
+    carried the misses.
+    """
+    from repro.core.shuffle import sim_serve_features
+
+    h_input = sim_serve_features(cache_block, plan_arrays["cache"], miss_feats)
+    return gnn_forward(spec, params, h_input, plan_arrays, shuffle_fn)
+
+
 def gnn_forward_spmd(
     spec: GNNSpec,
     params: list[dict],
-    h_input: jnp.ndarray,  # (N_L, F) this device's input rows
+    h_input: jnp.ndarray,  # (N_L, F) input rows — or (M, F) misses if cached
     plan_arrays: dict,  # per-device slices (leading P axis removed)
     axis_name: str,
+    cache_local: jnp.ndarray | None = None,  # (C, F) resident cache shard
 ) -> jnp.ndarray:
-    """Per-device forward for `shard_map` execution (same math as sim mode)."""
-    from repro.core.shuffle import spmd_shuffle
+    """Per-device forward for `shard_map` execution (same math as sim mode).
 
+    When ``cache_local`` is given, ``h_input`` is the (M, F) miss block and
+    the input rows are served from the sharded resident cache first
+    (``spmd_serve_features`` — the mirror of ``gnn_forward_cached``).
+    """
+    from repro.core.shuffle import spmd_serve_features, spmd_shuffle
+
+    if cache_local is not None:
+        h_input = spmd_serve_features(
+            cache_local, plan_arrays["cache"], h_input, axis_name
+        )
     h = h_input
     L = spec.num_layers
     for li in range(L - 1, -1, -1):

@@ -32,9 +32,10 @@ from repro.core.splitting import (
     SplitPlan,
     build_dp_plan,
     build_split_plan,
+    pad_axis,
     repad_plan,
 )
-from repro.graph.cache import FeatureCache, LoadBreakdown
+from repro.graph.cache import CachePlan, FeatureCache, LoadBreakdown
 from repro.graph.sampling import NeighborSampler
 from repro.runtime.prefetch import OrderedPrefetcher
 from repro.runtime.signature import SignatureCache, plan_signature
@@ -46,17 +47,22 @@ from repro.runtime.signature import SignatureCache, plan_signature
 
 @dataclass
 class PlanBatch:
-    """One fully-staged mini-batch: plan + host feature/label blocks."""
+    """One fully-staged mini-batch: plan + host feature/label blocks.
+
+    With a ``cache_plan``, ``feats`` is the compacted (P, M, F) cache-miss
+    block; without one it is the full (P, N_L, F) host gather.
+    """
 
     index: int
     epoch: int
     plan: SplitPlan
-    feats: np.ndarray  # (P, N_L, F) float32, padding rows zeroed
+    feats: np.ndarray  # (P, N_L, F) — or (P, M, F) misses when cache-served
     labels: np.ndarray  # (P, N_0) int32, padding zeroed
     breakdown: LoadBreakdown | None
     t_sample: float
     t_split: float
     t_load: float
+    cache_plan: CachePlan | None = None
     signature: tuple = ()
     sig_hit: bool = False
 
@@ -81,6 +87,7 @@ class PlanProducer:
         pad_multiple: int,
         assignment: np.ndarray | None = None,
         cache: FeatureCache | None = None,
+        serve_cache: bool = True,
     ):
         if mode not in ("split", "dp", "pushpull"):
             raise ValueError(f"unknown mode {mode!r}")
@@ -94,9 +101,10 @@ class PlanProducer:
         self.pad_multiple = pad_multiple
         self.assignment = assignment
         self.cache = cache
+        self.serve_cache = serve_cache
 
     def build(self, epoch: int, index: int, targets: np.ndarray) -> PlanBatch:
-        from repro.train.plan_io import load_features, load_labels
+        from repro.train.plan_io import load_labels, stage_host_features
 
         t0 = time.perf_counter()
         if self.mode in ("dp", "pushpull"):
@@ -115,9 +123,11 @@ class PlanProducer:
                 pad_multiple=self.pad_multiple,
             )
         t2 = time.perf_counter()
-        feats = load_features(plan, self.features)
+        cache_plan, feats, breakdown = stage_host_features(
+            plan, self.features, self.cache, self.serve_cache,
+            self.pad_multiple,
+        )
         labels = load_labels(plan, self.labels)
-        breakdown = self.cache.classify_plan(plan) if self.cache else None
         t3 = time.perf_counter()
         return PlanBatch(
             index=index,
@@ -129,28 +139,46 @@ class PlanProducer:
             t_sample=t1 - t0,
             t_split=t2 - t1,
             t_load=t3 - t2,
+            cache_plan=cache_plan,
         )
 
 
-def _pad_axis1(a: np.ndarray, size: int) -> np.ndarray:
-    if a.shape[1] >= size:
-        return a
-    widths = [(0, 0)] * a.ndim
-    widths[1] = (0, size - a.shape[1])
-    return np.pad(a, widths)
+def finalize_cache_plan(cp: CachePlan, hwm: dict, n_l: int) -> CachePlan:
+    """Grow a cache plan to the running high-water marks (``CM``/``CS``).
+
+    The single definition of the cache-plan HWM keys — shared by the
+    delivery-side ``_finalize`` and the trainer's inline ``train_iter`` path
+    so the two stay bit-identical.
+    """
+    hwm["CM"] = max(hwm.get("CM", 0), cp.max_miss)
+    hwm["CS"] = max(hwm.get("CS", 0), cp.max_send)
+    return cp.pad_to(n_l, hwm["CM"], hwm["CS"])
 
 
 def _finalize(
     batch: PlanBatch, hwm: dict, sig_cache: SignatureCache | None
 ) -> PlanBatch:
     """Order-sensitive delivery step: repad to high-water marks, pad the
-    staged feature/label blocks to match, and record the jit signature."""
+    staged feature/label blocks to match, and record the jit signature.
+
+    The cache plan is repadded here too (keys ``CM``/``CS``): its arrays are
+    purely position-based, so growing them only appends masked entries —
+    unlike ``edge_src``, nothing needs rebasing.
+    """
     t0 = time.perf_counter()
     repad_plan(batch.plan, hwm)
-    batch.feats = _pad_axis1(batch.feats, batch.plan.front_ids[-1].shape[1])
-    batch.labels = _pad_axis1(batch.labels, batch.plan.front_ids[0].shape[1])
+    if batch.cache_plan is not None:
+        finalize_cache_plan(
+            batch.cache_plan, hwm, batch.plan.front_ids[-1].shape[1]
+        )
+        batch.feats = pad_axis(batch.feats, 1, hwm["CM"])
+    else:
+        batch.feats = pad_axis(
+            batch.feats, 1, batch.plan.front_ids[-1].shape[1]
+        )
+    batch.labels = pad_axis(batch.labels, 1, batch.plan.front_ids[0].shape[1])
     batch.t_split += time.perf_counter() - t0
-    batch.signature = plan_signature(batch.plan)
+    batch.signature = plan_signature(batch.plan, batch.cache_plan)
     if sig_cache is not None:
         batch.sig_hit = sig_cache.record(batch.signature)
     return batch

@@ -14,14 +14,25 @@ from __future__ import annotations
 from repro.core.splitting import SplitPlan
 
 
-def plan_signature(plan: SplitPlan) -> tuple:
-    """The padded-shape key of a plan: exactly the dims the jit traces over."""
+def plan_signature(plan: SplitPlan, cache_plan=None) -> tuple:
+    """The padded-shape key of a plan: exactly the dims the jit traces over.
+
+    The cache plan's widths (miss block M, cache-shuffle Sc) are part of the
+    key when serving — the cached step traces over them too.
+    """
     fronts = tuple(ids.shape for ids in plan.front_ids)
     layers = tuple(
         (lp.edge_src.shape, lp.send_idx.shape, lp.self_pos.shape)
         for lp in plan.layers
     )
-    return (plan.num_devices, plan.num_layers, fronts, layers)
+    cache = ()
+    if cache_plan is not None:
+        cache = (
+            cache_plan.local_slot.shape,
+            cache_plan.send_slot.shape,
+            cache_plan.miss_ids.shape,
+        )
+    return (plan.num_devices, plan.num_layers, fronts, layers, cache)
 
 
 class SignatureCache:

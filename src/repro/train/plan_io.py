@@ -1,13 +1,37 @@
-"""Host plan -> device pytree conversion and feature loading."""
+"""Host plan -> device pytree conversion and feature loading.
+
+Two loading paths feed the jitted step:
+
+  * full host gather (``load_features``) — every input row crosses the host
+    link; the only option without a cache.
+  * cache serving — only the *miss* rows are host-gathered
+    (``load_miss_features``); local/remote hits are assembled on device from
+    the resident cache block (``core.shuffle.sim_serve_features``). The
+    ``CachePlan`` arrays ride along in the plan pytree under ``"cache"``.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.splitting import SplitPlan
+from repro.graph.cache import CachePlan
 
 
-def plan_to_device(plan: SplitPlan) -> dict:
+def cache_plan_to_device(cp: CachePlan) -> dict:
+    """CachePlan -> jit-able pytree (host ``miss_ids`` stays behind)."""
+    return {
+        "local_slot": jnp.asarray(cp.local_slot, jnp.int32),
+        "local_mask": jnp.asarray(cp.local_mask),
+        "send_slot": jnp.asarray(cp.send_slot, jnp.int32),
+        "recv_pos": jnp.asarray(cp.recv_pos, jnp.int32),
+        "recv_mask": jnp.asarray(cp.recv_mask),
+        "miss_pos": jnp.asarray(cp.miss_pos, jnp.int32),
+        "miss_mask": jnp.asarray(cp.miss_mask),
+    }
+
+
+def plan_to_device(plan: SplitPlan, cache_plan: CachePlan | None = None) -> dict:
     """Convert a SplitPlan into a jit-able pytree (indices as int32)."""
     layers = []
     for lp in plan.layers:
@@ -20,25 +44,32 @@ def plan_to_device(plan: SplitPlan) -> dict:
                 "self_pos": jnp.asarray(lp.self_pos, jnp.int32),
             }
         )
-    return {
+    out = {
         "layers": layers,
         "target_mask": jnp.asarray(plan.node_mask[0]),
         "input_mask": jnp.asarray(plan.node_mask[-1]),
     }
+    if cache_plan is not None:
+        out["cache"] = cache_plan_to_device(cache_plan)
+    return out
 
 
 def stage_batch(
-    plan: SplitPlan, feats: np.ndarray, labels: np.ndarray
+    plan: SplitPlan,
+    feats: np.ndarray,
+    labels: np.ndarray,
+    cache_plan: CachePlan | None = None,
 ) -> tuple:
     """Host -> device transfer of one staged batch (plan + features + labels).
 
-    One call site for the transfer keeps the double-buffering window in the
-    trainer explicit: staging batch ``k+1`` can be issued while the step for
-    batch ``k`` is still in flight.
+    With a cache plan, ``feats`` is the small (P, M, F) miss block instead of
+    the full (P, N_L, F) gather. One call site for the transfer keeps the
+    double-buffering window in the trainer explicit: staging batch ``k+1``
+    can be issued while the step for batch ``k`` is still in flight.
     """
     return (
         jnp.asarray(feats),
-        plan_to_device(plan),
+        plan_to_device(plan, cache_plan),
         jnp.asarray(labels, jnp.int32),
     )
 
@@ -54,6 +85,38 @@ def load_features(plan: SplitPlan, features: np.ndarray) -> np.ndarray:
     # so this roughly halves the memory traffic of the loading stage
     rows[~plan.node_mask[-1]] = 0.0
     return rows
+
+
+def load_miss_features(cp: CachePlan, features: np.ndarray) -> np.ndarray:
+    """Host gather of only the cache-miss rows: (P, M, F) float32, padding 0.
+
+    This is the whole point of the serving path — the host link carries
+    ``M`` rows per device instead of ``N_L``.
+    """
+    rows = features[cp.miss_ids].astype(np.float32, copy=False)
+    rows[~cp.miss_mask] = 0.0
+    return rows
+
+
+def stage_host_features(
+    plan: SplitPlan,
+    features: np.ndarray,
+    cache=None,
+    serve_cache: bool = False,
+    pad_multiple: int = 8,
+) -> tuple:
+    """The load stage for one plan: ``(cache_plan, feats, breakdown)``.
+
+    Chooses the serving path (compacted miss gather + CachePlan) or the full
+    host gather. The single definition shared by ``PlanProducer.build``
+    (producer threads) and ``Trainer.train_iter`` (inline path) — the two
+    must stay bit-identical.
+    """
+    if cache is not None and serve_cache and cache.serves:
+        cp = cache.build_plan(plan, pad_multiple=pad_multiple)
+        return cp, load_miss_features(cp, features), cp.breakdown()
+    feats = load_features(plan, features)
+    return None, feats, (cache.classify_plan(plan) if cache else None)
 
 
 def load_labels(plan: SplitPlan, labels: np.ndarray) -> np.ndarray:

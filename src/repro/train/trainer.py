@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.splitting import repad_plan
+from repro.core.splitting import pad_axis, repad_plan
 from repro.core import (
     build_dp_plan,
     build_split_plan,
@@ -36,15 +36,16 @@ from repro.graph.cache import FeatureCache, LoadBreakdown
 from repro.graph.datasets import GraphDataset
 from repro.graph.sampling import NeighborSampler
 from repro.models.gnn import GNNSpec, init_gnn_params
-from repro.models.gnn.layers import gnn_forward
+from repro.models.gnn.layers import gnn_forward, gnn_forward_cached
 from repro.runtime import PlanBatch, PlanProducer, SignatureCache, make_plan_source
+from repro.runtime.plan_source import finalize_cache_plan
 from repro.train import optimizer as opt_lib
 from repro.train.loss import masked_softmax_xent, masked_accuracy
 from repro.train.plan_io import (
-    load_features,
     load_labels,
     plan_to_device,
     stage_batch,
+    stage_host_features,
 )
 
 
@@ -62,6 +63,8 @@ class TrainConfig:
     pad_multiple: int = -1  # -1 = pow2 bucketing
     cache_mode: str = "none"  # none | distributed | partitioned
     cache_capacity_per_device: int = 0
+    cache_serve: bool = True  # serve hits from the device-resident block
+    #   (False = legacy accounting-only cache: full host gather every step)
     plan_source: str = "serial"  # serial | pipelined (DESIGN.md §6)
     pipeline_depth: int = 4  # max in-flight batches (pipelined source)
     plan_workers: int = 2  # producer threads (pipelined source)
@@ -179,6 +182,7 @@ class Trainer:
         self.t_partition = time.perf_counter() - t0
 
         self.cache = None
+        self.cache_block = None  # (P, C, F) device-resident rows when serving
         if cfg.cache_mode != "none":
             self.cache = FeatureCache(
                 dataset.graph.num_nodes,
@@ -190,13 +194,17 @@ class Trainer:
                     self.partition.assignment if self.partition else None
                 ),
             )
+            if cfg.cache_serve and self.cache.serves:
+                self.cache_block = jnp.asarray(
+                    self.cache.build_resident(dataset.features)
+                )
 
         key = jax.random.PRNGKey(cfg.seed)
         self.params = init_gnn_params(key, spec)
         opt_factory = getattr(opt_lib, cfg.optimizer)
         self.opt = opt_factory(cfg.lr)
         self.opt_state = self.opt.init(self.params)
-        self._step_fn = self._build_step()
+        self._step_fn, self._cached_step_fn = self._build_step()
         self._pad_hwm: dict = {}  # high-water-mark padding (stable jit sigs)
         self._epoch = 0  # epochs consumed via train_epoch (keyed RNG input)
         self.sig_cache = SignatureCache()
@@ -209,28 +217,47 @@ class Trainer:
             pad_multiple=cfg.pad_multiple,
             assignment=self.partition.assignment if self.partition else None,
             cache=self.cache,
+            serve_cache=self.cache_block is not None,
         )
 
     # ------------------------------------------------------------------ #
     def _build_step(self):
         spec, opt = self.spec, self.opt
 
-        def loss_fn(params, feats, plan_arrays, labels):
-            logits = gnn_forward(spec, params, feats, plan_arrays, sim_shuffle)
-            mask = plan_arrays["target_mask"]
-            loss = masked_softmax_xent(logits, labels, mask)
-            acc = masked_accuracy(logits, labels, mask)
-            return loss, acc
+        def make_step(forward_fn):
+            """One jitted update step; ``inputs`` is the feature pytree —
+            a (P, N_L, F) block, or (cache_block, miss_feats) when served.
+            One factory guarantees cached and uncached steps share the exact
+            loss/update math (the serving path must never drift)."""
 
-        @jax.jit
-        def step(params, opt_state, feats, plan_arrays, labels):
-            (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                params, feats, plan_arrays, labels
+            def loss_fn(params, inputs, plan_arrays, labels):
+                logits = forward_fn(params, inputs, plan_arrays)
+                mask = plan_arrays["target_mask"]
+                loss = masked_softmax_xent(logits, labels, mask)
+                acc = masked_accuracy(logits, labels, mask)
+                return loss, acc
+
+            @jax.jit
+            def step(params, opt_state, inputs, plan_arrays, labels):
+                (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, inputs, plan_arrays, labels
+                )
+                params, opt_state = opt.update(grads, opt_state, params)
+                return params, opt_state, loss, acc
+
+            return step
+
+        step = make_step(
+            lambda params, feats, pa: gnn_forward(
+                spec, params, feats, pa, sim_shuffle
             )
-            params, opt_state = opt.update(grads, opt_state, params)
-            return params, opt_state, loss, acc
-
-        return step
+        )
+        cached_step = make_step(
+            lambda params, inputs, pa: gnn_forward_cached(
+                spec, params, inputs[0], inputs[1], pa, sim_shuffle
+            )
+        )
+        return step, cached_step
 
     # ------------------------------------------------------------------ #
     def _plan_for(self, targets: np.ndarray):
@@ -257,17 +284,34 @@ class Trainer:
         plan, t_sample, t_split = self._plan_for(targets)
 
         t0 = time.perf_counter()
-        feats = load_features(plan, self.ds.features)
+        cache_plan, feats, breakdown = stage_host_features(
+            plan, self.ds.features, self.cache,
+            serve_cache=self.cache_block is not None,
+            pad_multiple=self.cfg.pad_multiple,
+        )
+        if cache_plan is not None:
+            # widths follow the same high-water marks as the plan itself
+            # (stable jit signatures); _plan_for already repadded the plan
+            finalize_cache_plan(
+                cache_plan, self._pad_hwm, plan.front_ids[-1].shape[1]
+            )
+            feats = pad_axis(feats, 1, self._pad_hwm["CM"])
         labels = load_labels(plan, self.ds.labels)
-        breakdown = self.cache.classify_plan(plan) if self.cache else None
         t_load = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        plan_arrays = plan_to_device(plan)
-        self.params, self.opt_state, loss, acc = self._step_fn(
-            self.params, self.opt_state, jnp.asarray(feats), plan_arrays,
-            jnp.asarray(labels),
-        )
+        plan_arrays = plan_to_device(plan, cache_plan)
+        if cache_plan is not None:
+            self.params, self.opt_state, loss, acc = self._cached_step_fn(
+                self.params, self.opt_state,
+                (self.cache_block, jnp.asarray(feats)), plan_arrays,
+                jnp.asarray(labels),
+            )
+        else:
+            self.params, self.opt_state, loss, acc = self._step_fn(
+                self.params, self.opt_state, jnp.asarray(feats), plan_arrays,
+                jnp.asarray(labels),
+            )
         loss = float(loss)
         t_compute = time.perf_counter() - t0
 
@@ -309,11 +353,17 @@ class Trainer:
         """Stage a finalized batch to device and dispatch the jitted step.
         Returns the (still-async) loss/accuracy device values."""
         feats_d, plan_arrays, labels_d = stage_batch(
-            batch.plan, batch.feats, batch.labels
+            batch.plan, batch.feats, batch.labels, batch.cache_plan
         )
-        self.params, self.opt_state, loss, acc = self._step_fn(
-            self.params, self.opt_state, feats_d, plan_arrays, labels_d
-        )
+        if batch.cache_plan is not None:
+            self.params, self.opt_state, loss, acc = self._cached_step_fn(
+                self.params, self.opt_state, (self.cache_block, feats_d),
+                plan_arrays, labels_d,
+            )
+        else:
+            self.params, self.opt_state, loss, acc = self._step_fn(
+                self.params, self.opt_state, feats_d, plan_arrays, labels_d
+            )
         return loss, acc
 
     @staticmethod

@@ -1,0 +1,128 @@
+"""High-water-mark repadding must preserve plan semantics exactly.
+
+Remote ``edge_src`` entries encode ``n_local + q*S + slot`` against the
+layout they were built with; ``repad_plan`` grows ``N_{i+1}`` and ``S`` to
+running high-water marks, so it must rebase those entries onto the new
+layout. The regression here is the one that silently zeroed cross-split
+aggregation: any batch smaller than the running HWM read padding rows
+instead of received features.
+"""
+import numpy as np
+import pytest
+
+from repro.core.partition import partition_graph
+from repro.core.presample import presample
+from repro.core.splitting import build_split_plan, repad_plan
+from repro.graph.datasets import make_dataset
+from repro.graph.sampling import sample_minibatch
+from repro.models.gnn import GNNSpec
+from repro.train.trainer import TrainConfig, Trainer
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_dataset("tiny")
+    w = presample(ds.graph, ds.train_ids, [4, 4], 32, num_epochs=2)
+    part = partition_graph(ds.graph, 4, method="gsplit", weights=w, seed=0)
+    return ds, part
+
+
+def _reconstruct_edges(mb, plan):
+    """Re-derive every (src, dst) global edge through the shuffle index."""
+    P = plan.num_devices
+    for i, lp in enumerate(plan.layers):
+        n_local = lp.n_local
+        assert n_local == plan.front_ids[i + 1].shape[1]  # repad keeps sync
+        S = lp.max_send
+        got = []
+        for p in range(P):
+            for e in np.flatnonzero(lp.edge_mask[p]):
+                sp = lp.edge_src[p, e]
+                if sp < n_local:
+                    src_gid = plan.front_ids[i + 1][p, sp]
+                else:
+                    q, slot = divmod(sp - n_local, S)
+                    src_gid = plan.front_ids[i + 1][q, lp.send_idx[q, p, slot]]
+                dst_gid = plan.front_ids[i][p, lp.edge_dst[p, e]]
+                got.append((src_gid, dst_gid))
+        want = sorted(zip(mb.layers[i].src.tolist(), mb.layers[i].dst.tolist()))
+        assert sorted(got) == want, f"layer {i} edge mismatch"
+
+
+def test_repad_rebases_remote_edge_src(setup):
+    """A small batch repadded to a larger batch's HWM still reconstructs."""
+    ds, part = setup
+    rng = np.random.default_rng(6)
+    big = sample_minibatch(ds.graph, ds.train_ids[:48], [4, 4], rng)
+    small = sample_minibatch(ds.graph, ds.train_ids[48:60], [4, 4], rng)
+
+    hwm = {}
+    big_plan = build_split_plan(big, part.assignment, 4)
+    repad_plan(big_plan, hwm)
+    _reconstruct_edges(big, big_plan)
+
+    fresh = build_split_plan(small, part.assignment, 4)
+    assert fresh.cross_edge_fraction() > 0, "need cross edges to exercise"
+    small_plan = build_split_plan(small, part.assignment, 4)
+    repad_plan(small_plan, hwm)
+    # the repad actually grew something, else this test is vacuous
+    assert any(
+        sp.shape != fp.shape
+        for sp, fp in zip(small_plan.front_ids, fresh.front_ids)
+    )
+    _reconstruct_edges(small, small_plan)
+    # repadding again with the same marks is a layout no-op
+    repad_plan(small_plan, dict(hwm))
+    _reconstruct_edges(small, small_plan)
+
+
+def test_cross_edge_fraction_stable_under_repad(setup):
+    """Repadded plans must report the same cross-edge stats as fresh ones."""
+    ds, part = setup
+    rng = np.random.default_rng(7)
+    big = sample_minibatch(ds.graph, ds.train_ids[:48], [4, 4], rng)
+    small = sample_minibatch(ds.graph, ds.train_ids[48:64], [4, 4], rng)
+    hwm = {}
+    repad_plan(build_split_plan(big, part.assignment, 4), hwm)
+    fresh = build_split_plan(small, part.assignment, 4)
+    repadded = build_split_plan(small, part.assignment, 4)
+    repad_plan(repadded, hwm)
+    assert repadded.cross_edge_fraction() == fresh.cross_edge_fraction()
+    assert repadded.computed_edges() == fresh.computed_edges()
+    assert repadded.shuffle_rows() == fresh.shuffle_rows()
+
+
+@pytest.mark.parametrize("pad_multiple", [8, -1], ids=["fixed", "pow2"])
+def test_repadded_losses_match_fresh_plans(setup, pad_multiple):
+    """A split-mode epoch where a large batch precedes smaller ones gives
+    bit-identical losses whether plans are HWM-repadded or freshly built —
+    the test that catches the stale-offset bug (repadded small batches
+    aggregated zeros for every cross-split edge)."""
+    ds, _ = setup
+    spec = GNNSpec(
+        model="sage", in_dim=ds.spec.feat_dim, hidden_dim=16,
+        out_dim=ds.spec.num_classes, num_layers=2,
+    )
+    # big batch first so the HWM is set, then strictly smaller batches
+    batches = [
+        ds.train_ids[:64],
+        ds.train_ids[:12],
+        ds.train_ids[20:36],
+        ds.train_ids[40:48],
+    ]
+
+    def run(repad_across_batches: bool) -> list[float]:
+        cfg = TrainConfig(
+            mode="split", num_devices=4, fanouts=(4, 4), batch_size=64,
+            presample_epochs=2, pad_multiple=pad_multiple, seed=3,
+        )
+        tr = Trainer(ds, spec, cfg)
+        losses = []
+        for targets in batches:
+            if not repad_across_batches:
+                tr._pad_hwm = {}  # every plan freshly padded, no HWM reuse
+            losses.append(tr.train_iter(targets).loss)
+        return losses
+
+    repadded, fresh = run(True), run(False)
+    assert repadded == fresh, (repadded, fresh)

@@ -17,6 +17,7 @@ def _reconstruct_and_check(mb, plan):
     P = plan.num_devices
     for i, lp in enumerate(plan.layers):
         n_local = plan.front_ids[i + 1].shape[1]
+        assert lp.n_local == n_local  # repad_plan keeps the two in sync
         S = lp.max_send
         got = []
         for p in range(P):

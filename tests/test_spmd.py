@@ -110,6 +110,81 @@ def test_spmd_gnn_forward_matches_sim():
     """)
 
 
+def test_spmd_cache_serving_matches_sim():
+    """shard_map cache serving (sharded resident block + all-to-all remote
+    fetch) == sim serving == full host gather, and the cached spmd forward
+    matches the sim forward fed by ``load_features``."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.graph.datasets import make_dataset
+        from repro.graph.sampling import sample_minibatch
+        from repro.core import presample, partition_graph, build_split_plan, sim_shuffle
+        from repro.core.shuffle import sim_serve_features, spmd_serve_features
+        from repro.graph.cache import FeatureCache
+        from repro.launch.sharding import split_cache_specs
+        from repro.models.gnn import GNNSpec, init_gnn_params
+        from repro.models.gnn.layers import gnn_forward, gnn_forward_spmd
+        from repro.train.plan_io import (
+            cache_plan_to_device, load_features, load_miss_features,
+            plan_to_device,
+        )
+
+        NDEV = 4
+        ds = make_dataset("tiny")
+        rng = np.random.default_rng(0)
+        mb = sample_minibatch(ds.graph, ds.train_ids[:16], [3, 3], rng)
+        w = presample(ds.graph, ds.train_ids, [3, 3], 16, num_epochs=1)
+        part = partition_graph(ds.graph, NDEV, method="gsplit", weights=w)
+        plan = build_split_plan(mb, part.assignment, NDEV)
+        cache = FeatureCache(ds.graph.num_nodes, NDEV, 24,
+                             ranking=w.vertex_weight, mode="distributed",
+                             partition_assignment=part.assignment)
+        cp = cache.build_plan(plan)
+        assert cp.breakdown().remote_hit > 0  # exercise the all-to-all
+        block = jnp.asarray(cache.build_resident(ds.features))
+        cpd = cache_plan_to_device(cp)
+        miss = jnp.asarray(load_miss_features(cp, ds.features))
+
+        want = load_features(plan, ds.features)
+        ref = sim_serve_features(block, cpd, miss)
+        np.testing.assert_array_equal(np.asarray(ref), want)
+
+        mesh = jax.make_mesh((NDEV,), ("model",))
+        specs = split_cache_specs((block, cpd, miss))
+        fn = shard_map(
+            lambda b, c, m: spmd_serve_features(
+                b[0], jax.tree_util.tree_map(lambda x: x[0], c), m[0], "model"
+            )[None],
+            mesh=mesh, in_specs=specs, out_specs=P("model"),
+        )
+        got = fn(block, cpd, miss)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+        # cached spmd forward == sim forward on the host-gathered block
+        spec = GNNSpec(model="sage", in_dim=ds.spec.feat_dim, hidden_dim=16,
+                       out_dim=4, num_layers=2)
+        params = init_gnn_params(jax.random.PRNGKey(0), spec)
+        pa = plan_to_device(plan, cp)
+        ref_out = gnn_forward(spec, params, jnp.asarray(want), pa, sim_shuffle)
+        def body(b, m, pa_l):
+            pa_dev = jax.tree_util.tree_map(lambda x: x[0], pa_l)
+            out = gnn_forward_spmd(spec, params, m[0], pa_dev, "model",
+                                   cache_local=b[0])
+            return out[None]
+        fwd = shard_map(
+            body, mesh=mesh,
+            in_specs=(P("model"), P("model"), P("model")),
+            out_specs=P("model"), check_rep=False,
+        )
+        out = fwd(block, miss, pa)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                                   rtol=2e-5, atol=2e-5)
+        print("OK")
+    """)
+
+
 @pytest.mark.slow
 @pytest.mark.skipif(
     not hasattr(__import__("jax"), "set_mesh"),
