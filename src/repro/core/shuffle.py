@@ -146,20 +146,26 @@ def spmd_serve_features(
 
 
 def segment_mean(
-    contrib: jnp.ndarray, dst: jnp.ndarray, mask: jnp.ndarray, num_out: int
+    contrib: jnp.ndarray, dst: jnp.ndarray, mask: jnp.ndarray, num_out: int,
+    backend: str = "jnp",
 ) -> jnp.ndarray:
-    """Masked segment mean over edge contributions (pure-jnp path).
+    """Masked segment mean over edge contributions.
 
-    contrib -- (E, F) per-edge messages, dst -- (E,) rows, mask -- (E,) valid.
+    Thin delegate to ``kernels.segment_ops`` — the single dispatcher behind
+    every aggregation call, so the sim and spmd paths (and any offline user
+    of this module) share one implementation and its empty-segment
+    guarantees (docs/KERNELS.md).
     """
-    w = mask.astype(contrib.dtype)
-    total = jax.ops.segment_sum(contrib * w[:, None], dst, num_segments=num_out)
-    count = jax.ops.segment_sum(w, dst, num_segments=num_out)
-    return total / jnp.maximum(count, 1.0)[:, None]
+    from repro.kernels import segment_ops
+
+    return segment_ops.segment_mean(contrib, dst, mask, num_out, backend)
 
 
 def segment_sum(
-    contrib: jnp.ndarray, dst: jnp.ndarray, mask: jnp.ndarray, num_out: int
+    contrib: jnp.ndarray, dst: jnp.ndarray, mask: jnp.ndarray, num_out: int,
+    backend: str = "jnp",
 ) -> jnp.ndarray:
-    w = mask.astype(contrib.dtype)
-    return jax.ops.segment_sum(contrib * w[:, None], dst, num_segments=num_out)
+    """Masked segment sum; delegate to ``kernels.segment_ops`` (see above)."""
+    from repro.kernels import segment_ops
+
+    return segment_ops.segment_sum(contrib, dst, mask, num_out, backend)

@@ -32,6 +32,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.graph.sampling import MiniBatchSample
+from repro.kernels.gather_segsum.layout import AGG_ROWS, layer_layout
 
 
 def pad_axis(a: np.ndarray, axis: int, size: int) -> np.ndarray:
@@ -46,6 +47,28 @@ def pad_axis(a: np.ndarray, axis: int, size: int) -> np.ndarray:
     widths = [(0, 0)] * a.ndim
     widths[axis] = (0, size - a.shape[axis])
     return np.pad(a, widths)
+
+
+def pad_axis_fill(a: np.ndarray, axis: int, size: int, fill: int) -> np.ndarray:
+    """``pad_axis`` with an explicit fill — for arrays whose padding value is
+    a *sentinel* rather than zero (the packed kernel layout: ``pack_dst``
+    pads with the row sentinel R, never 0 = a valid destination row)."""
+    if a.shape[axis] >= size:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, size - a.shape[axis])
+    return np.pad(a, widths, constant_values=fill)
+
+
+def pad_axis_edge(a: np.ndarray, axis: int, size: int) -> np.ndarray:
+    """``pad_axis`` replicating the trailing value — for CSR offset arrays,
+    where appended destinations must read as empty segments (offset ==
+    previous offset), not as segments starting at 0."""
+    if a.shape[axis] >= size:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, size - a.shape[axis])
+    return np.pad(a, widths, mode="edge")
 
 
 def _roundup(x: int, m: int) -> int:
@@ -79,6 +102,15 @@ class LayerPlan:
     # (DESIGN.md §3, mixed-buffer offset invariant). Required — a wrong
     # value silently corrupts every repadded plan.
     n_local: int
+    # --- dst-sorted edge layout (DESIGN.md §3, docs/KERNELS.md) -----------
+    # Built once per plan on the producer thread by
+    # ``kernels.gather_segsum.layout.layer_layout``; consumed by the fused
+    # Pallas aggregation kernels (``agg_backend='pallas'``). Repad-stable:
+    # ``repad_plan`` grows every axis by pure sentinel appends.
+    edge_perm: np.ndarray  # (P, E) int32 permutation: valid dst-sorted first
+    seg_offsets: np.ndarray  # (P, N_i + 1) int32 CSR offsets, dst-sorted order
+    pack_perm: np.ndarray  # (P, DB, EB) int32 slot -> edge idx (pad: E)
+    pack_dst: np.ndarray  # (P, DB, EB) int32 slot -> dst - db*R (pad: R)
 
     @property
     def max_send(self) -> int:
@@ -283,6 +315,7 @@ def build_split_plan(
                 send_count=send_count,
                 self_pos=self_pos,
                 n_local=n_local,
+                **layer_layout(edge_dst, edge_mask, front_size[i]),
             )
         )
 
@@ -357,6 +390,7 @@ def build_dp_plan(
                 send_count=np.zeros((P, P), dtype=np.int32),
                 self_pos=self_pos,
                 n_local=front_size[i + 1],
+                **layer_layout(edge_dst, edge_mask, front_size[i]),
             )
         )
 
@@ -398,9 +432,23 @@ def repad_plan(plan: SplitPlan, hwm: dict) -> SplitPlan:
     for i, lp in enumerate(plan.layers):
         ek = f"E{i}"
         hwm[ek] = max(hwm.get(ek, 0), lp.edge_src.shape[1])
+        old_e = lp.edge_perm.shape[1]
         lp.edge_src = pad_axis(lp.edge_src, 1, hwm[ek])
         lp.edge_dst = pad_axis(lp.edge_dst, 1, hwm[ek])
         lp.edge_mask = pad_axis(lp.edge_mask, 1, hwm[ek])
+        # dst-sorted layout, edge axis: the permutation must stay a true
+        # permutation of [0, E), so the appended (masked) edge slots join its
+        # tail in order. seg_offsets index *sorted positions* of valid edges
+        # only — edge growth leaves them untouched. pack_perm entries that
+        # held the old sentinel E now point at masked edge slots, which the
+        # kernels ignore (padding is marked by pack_dst == R alone).
+        new_e = hwm[ek]
+        if new_e > old_e:
+            P = lp.edge_perm.shape[0]
+            extra = np.broadcast_to(
+                np.arange(old_e, new_e, dtype=np.int32), (P, new_e - old_e)
+            )
+            lp.edge_perm = np.concatenate([lp.edge_perm, extra], axis=1)
         sk = f"S{i}"
         old_s = lp.send_idx.shape[2]
         hwm[sk] = max(hwm.get(sk, 0), old_s)
@@ -423,4 +471,19 @@ def repad_plan(plan: SplitPlan, hwm: dict) -> SplitPlan:
         lp.send_idx = pad_axis(lp.send_idx, 2, new_s)
         nk = f"N{i}"
         lp.self_pos = pad_axis(lp.self_pos, 1, hwm[nk])
+        # dst-sorted layout, destination axis: appended dst rows are empty
+        # segments (replicate the final CSR offset) and empty packed blocks
+        # (sentinel fills — R for pack_dst, never 0, which is a valid row).
+        # Growing the per-block width EB appends sentinel slots inside each
+        # block; all three are pure appends, so no rebase is ever needed
+        # (the §3 dst-sorted-layout invariant).
+        new_ni = hwm[nk]
+        lp.seg_offsets = pad_axis_edge(lp.seg_offsets, 1, new_ni + 1)
+        ebk = f"EB{i}"
+        hwm[ebk] = max(hwm.get(ebk, 0), lp.pack_perm.shape[2])
+        new_db = max(-(-new_ni // AGG_ROWS), 1)
+        lp.pack_perm = pad_axis_fill(lp.pack_perm, 2, hwm[ebk], new_e)
+        lp.pack_perm = pad_axis_fill(lp.pack_perm, 1, new_db, new_e)
+        lp.pack_dst = pad_axis_fill(lp.pack_dst, 2, hwm[ebk], AGG_ROWS)
+        lp.pack_dst = pad_axis_fill(lp.pack_dst, 1, new_db, AGG_ROWS)
     return plan

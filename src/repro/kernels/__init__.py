@@ -2,5 +2,9 @@
 
 Layout: one subpackage per kernel with ``kernel.py`` (pallas_call +
 BlockSpec), ``ops.py`` (jit'd wrapper incl. packing), ``ref.py`` (pure-jnp
-oracle). ``segment_ops`` is the backend dispatcher used by the GNN layers.
+oracle). ``segment_ops`` is the backend dispatcher used by the GNN layers;
+``gather_segsum`` is the fused gather->segment-aggregate family behind
+``agg_backend='pallas'`` (plan-fed, jit/grad-safe). The full contract —
+layouts, sentinels, repad invariants, how to add a kernel — is
+docs/KERNELS.md.
 """

@@ -16,6 +16,14 @@ def edge_softmax_pallas(
     rows: int = 128,
     interpret: bool = True,
 ) -> jnp.ndarray:
+    """Per-destination softmax over incoming edges: (E, H) -> (E, H).
+
+    Contract (docs/KERNELS.md): masked edges receive weight exactly 0 and
+    are excluded from the normalization; destinations whose edges are all
+    masked produce only zeros (never NaN — the kernel normalizes in f32
+    with a finite max clamp). ``dst``/``mask`` must be concrete (host-side
+    packing); valid edges of one destination sum to 1 within f32 rounding.
+    """
     pack = pack_edges(np.asarray(dst), np.asarray(mask), num_out, rows=rows)
     return edge_softmax_from_pack(logits, pack, interpret=interpret)
 

@@ -14,6 +14,14 @@ def decode_attention_pallas(
     seq_block: int = 512,
     interpret: bool = True,
 ) -> jnp.ndarray:
+    """Single-token GQA decode attention -> (B, H, Dv).
+
+    Contract (docs/KERNELS.md): ``H`` must be a multiple of ``KV`` (group
+    size G = H // KV); cache positions >= ``cache_len`` are masked out of
+    the softmax, so stale KV-cache tail values are irrelevant. ``cache_len``
+    may be a traced scalar — the op is jit-safe. Softmax/accumulation run
+    in f32; output is cast back to ``q.dtype``.
+    """
     B, H, D = q.shape
     S, KV = k.shape[1], k.shape[2]
     Dv = v.shape[3]

@@ -1,0 +1,13 @@
+"""Fused gather -> segment-aggregate kernels for the mixed-frontier hot path.
+
+The GNN layers' dominant memory traffic is the per-edge contribution buffer
+``mixed[edge_src]`` (shape (E, F)) that the unfused jnp path materializes in
+HBM and immediately reduces. The kernels here perform the gather and the
+segment reduction in one pass over destination-row tiles, so per-edge feature
+rows only ever exist as VMEM tiles (docs/KERNELS.md).
+
+Layout:  ``layout.py``  numpy-only host-side packing (plan construction)
+         ``ref.py``     pure-jnp oracles (materialize (E, F) — the baseline)
+         ``kernel.py``  Pallas forward + backward kernels
+         ``ops.py``     custom-vjp jit wrappers consuming plan-carried layout
+"""

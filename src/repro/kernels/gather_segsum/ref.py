@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the fused gather->segment-aggregate kernels.
+
+These materialize the (E, F) per-edge buffer — exactly the memory traffic
+the fused kernels eliminate — and are the bit-level baseline the Pallas path
+is tested against (docs/KERNELS.md lists the tolerance: f32 segment sums
+agree to ~1e-5 relative; the accumulation *order* differs, so bitwise
+equality is not guaranteed).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_segment_sum_ref(
+    mixed: jnp.ndarray,  # (M, F) mixed-frontier rows
+    edge_src: jnp.ndarray,  # (E,) int32 into mixed
+    edge_dst: jnp.ndarray,  # (E,) int32 into [0, num_out)
+    edge_mask: jnp.ndarray,  # (E,) bool
+    num_out: int,
+) -> jnp.ndarray:
+    """sum over incoming edges of mixed[src]: the unfused two-op hot path."""
+    contrib = mixed[edge_src]  # (E, F) — the buffer the fused kernel avoids
+    w = edge_mask.astype(contrib.dtype)
+    return jax.ops.segment_sum(contrib * w[:, None], edge_dst, num_segments=num_out)
+
+
+def gather_segment_mean_ref(
+    mixed: jnp.ndarray,
+    edge_src: jnp.ndarray,
+    edge_dst: jnp.ndarray,
+    edge_mask: jnp.ndarray,
+    num_out: int,
+) -> jnp.ndarray:
+    """Masked mean; destinations with zero valid edges return exact zeros."""
+    total = gather_segment_sum_ref(mixed, edge_src, edge_dst, edge_mask, num_out)
+    count = jax.ops.segment_sum(
+        edge_mask.astype(jnp.float32), edge_dst, num_segments=num_out
+    ).astype(total.dtype)
+    return total / jnp.maximum(count, 1.0)[:, None]
+
+
+def gather_weighted_segsum_ref(
+    mixed: jnp.ndarray,  # (M, F) with F = H * dh (head-major columns)
+    weights: jnp.ndarray,  # (E, H) per-edge per-head weights (e.g. GAT alpha)
+    edge_src: jnp.ndarray,
+    edge_dst: jnp.ndarray,
+    edge_mask: jnp.ndarray,
+    num_out: int,
+) -> jnp.ndarray:
+    """sum over edges of weights[e, h] * mixed[src, h*dh:(h+1)*dh]."""
+    E, H = weights.shape
+    M, F = mixed.shape
+    dh = F // H
+    contrib = mixed[edge_src].reshape(E, H, dh) * weights[:, :, None]
+    w = edge_mask.astype(mixed.dtype)
+    return jax.ops.segment_sum(
+        contrib.reshape(E, F) * w[:, None], edge_dst, num_segments=num_out
+    )

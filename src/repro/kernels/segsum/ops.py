@@ -67,6 +67,16 @@ def segment_sum_pallas(
     feat_block: int = 128,
     interpret: bool = True,
 ) -> jnp.ndarray:
+    """Masked ``segment_sum(contrib, dst)`` -> (num_out, F) via the packed
+    Pallas kernel.
+
+    Contract (docs/KERNELS.md): ``dst`` in [0, num_out) for every slot,
+    ``mask`` marks valid slots; masked slots contribute exactly 0 and empty
+    segments are exact zeros. ``dst``/``mask`` must be *concrete* (the pack
+    runs host-side), so this op cannot appear inside jit — the training step
+    uses ``kernels.gather_segsum``, whose layout rides in the plan instead.
+    Output dtype == ``contrib.dtype`` (accumulation is f32).
+    """
     pack = pack_edges(np.asarray(dst), np.asarray(mask), num_out, rows=rows)
     return segment_sum_from_pack(
         contrib, pack, num_out, feat_block=feat_block, interpret=interpret

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import segment_ops
+from repro.kernels.gather_segsum import ops as gather_ops
 
 
 @dataclass(frozen=True)
@@ -27,7 +28,11 @@ class GNNSpec:
     out_dim: int = 16
     num_layers: int = 3  # paper default 3
     num_heads: int = 4  # GAT only
+    # Aggregation backend (docs/KERNELS.md). "jnp" materializes the (E, F)
+    # per-edge buffer + XLA scatter-add; "pallas" runs the fused
+    # gather->segment-aggregate kernels over the plan's dst-sorted layout.
     agg_backend: str = "jnp"  # jnp | pallas
+    agg_interpret: bool = True  # pallas: interpret mode (CPU); False on TPU
     dtype: str = "float32"
 
     def layer_dims(self) -> list[tuple[int, int]]:
@@ -83,32 +88,67 @@ def init_gnn_params(key: jax.Array, spec: GNNSpec) -> list[dict]:
     return params
 
 
+def _agg_mean(spec: GNNSpec, mixed: jnp.ndarray, lp: dict, num_out: int):
+    """Masked mean of ``mixed[edge_src]`` per destination, backend-dispatched.
+
+    ``pallas`` runs the fused gather->segment-mean kernel on the plan's
+    dst-sorted layout — the (E, F) per-edge buffer is never materialized and
+    the denominator comes from the plan's CSR offsets. ``jnp`` is the
+    reference two-op path (gather, then XLA scatter-add).
+    """
+    if spec.agg_backend == "pallas":
+        return gather_ops.gather_segment_mean(
+            mixed, lp["edge_src"], lp["pack_perm"], lp["pack_dst"],
+            lp["seg_offsets"], num_out, interpret=spec.agg_interpret,
+        )
+    h_src = mixed[lp["edge_src"]]  # (E, F_in) — the buffer pallas avoids
+    return segment_ops.segment_mean(
+        h_src, lp["edge_dst"], lp["edge_mask"], num_out
+    )
+
+
+def _agg_weighted_sum(
+    spec: GNNSpec, mixed_flat: jnp.ndarray, alpha: jnp.ndarray, lp: dict,
+    num_out: int,
+):
+    """GAT aggregation: sum of alpha[e, h] * mixed[src, head h's columns]."""
+    if spec.agg_backend == "pallas":
+        return gather_ops.gather_weighted_segsum(
+            mixed_flat, alpha, lp["edge_src"], lp["pack_perm"],
+            lp["pack_dst"], num_out, interpret=spec.agg_interpret,
+        )
+    E, H = alpha.shape
+    dh = mixed_flat.shape[1] // H
+    msg = mixed_flat[lp["edge_src"]].reshape(E, H, dh) * alpha[:, :, None]
+    return segment_ops.segment_sum(
+        msg.reshape(E, H * dh), lp["edge_dst"], lp["edge_mask"], num_out
+    )
+
+
 def gnn_layer_apply(
     spec: GNNSpec,
     layer_params: dict,
     mixed: jnp.ndarray,  # (M, F_in) mixed-frontier rows (local + received)
-    edge_src: jnp.ndarray,  # (E,) int32 into mixed
-    edge_dst: jnp.ndarray,  # (E,) int32 into [0, N)
-    edge_mask: jnp.ndarray,  # (E,) bool
-    self_pos: jnp.ndarray,  # (N,) int32 into mixed (self rows are local)
+    lp: dict,  # one device's LayerPlan arrays (see plan_io.plan_to_device)
     num_out: int,
     is_last: bool,
 ) -> jnp.ndarray:
-    """One GNN layer on one device (the layer-centric 'black box' kernel)."""
-    backend = spec.agg_backend
+    """One GNN layer on one device (the layer-centric 'black box' kernel).
+
+    ``lp`` carries both addressings of the same edge set: the edge-order
+    arrays (``edge_src``/``edge_dst``/``edge_mask``) used by the jnp backend
+    and the dst-sorted packed layout (``pack_perm``/``pack_dst``/
+    ``seg_offsets``) used by the fused Pallas backend — docs/KERNELS.md.
+    """
+    edge_src, edge_dst = lp["edge_src"], lp["edge_dst"]
+    edge_mask, self_pos = lp["edge_mask"], lp["self_pos"]
     if spec.model == "sage":
-        h_src = mixed[edge_src]  # (E, F_in)
-        agg = segment_ops.segment_mean(
-            h_src, edge_dst, edge_mask, num_out, backend=backend
-        )
+        agg = _agg_mean(spec, mixed, lp, num_out)
         h_self = mixed[self_pos]
         out = h_self @ layer_params["w_self"] + agg @ layer_params["w_neigh"]
         out = out + layer_params["b"]
     elif spec.model == "gcn":
-        h_src = mixed[edge_src]
-        agg = segment_ops.segment_mean(
-            h_src, edge_dst, edge_mask, num_out, backend=backend
-        )
+        agg = _agg_mean(spec, mixed, lp, num_out)
         out = agg @ layer_params["w"] + layer_params["b"]
     elif spec.model == "gat":
         w = layer_params["w"]  # (F_in, H, dh)
@@ -119,13 +159,15 @@ def gnn_layer_apply(
         logits = jax.nn.leaky_relu(
             s_src[edge_src] + s_dst[self_pos][edge_dst], negative_slope=0.2
         )  # (E, H)
+        # softmax normalization stays on the (E, H) jnp path in both
+        # backends: it is H/dh-times smaller than the feature traffic, and
+        # keeping one implementation makes the backends agree on alpha
+        # bit-for-bit (only the weighted sum below differs, by fp tolerance)
         alpha = segment_ops.edge_softmax(
-            logits, edge_dst, edge_mask, num_out, backend=backend
+            logits, edge_dst, edge_mask, num_out
         )  # (E, H)
-        msg = wh[edge_src] * alpha[:, :, None]  # (E, H, dh)
-        agg = segment_ops.segment_sum(
-            msg.reshape(msg.shape[0], H * dh), edge_dst, edge_mask, num_out,
-            backend=backend,
+        agg = _agg_weighted_sum(
+            spec, wh.reshape(wh.shape[0], H * dh), alpha, lp, num_out
         )
         out = agg + layer_params["b"]
     else:
@@ -155,12 +197,11 @@ def gnn_forward(
         mixed = shuffle_fn(h, lp["send_idx"])  # (P, M, F)
         num_out = lp["self_pos"].shape[-1]  # static: N_i
         layer_params = params[L - 1 - li]  # params[0] consumes input features
-        apply_one = lambda m, es, ed, em, sp: gnn_layer_apply(  # noqa: E731
-            spec, layer_params, m, es, ed, em, sp, num_out, is_last=(li == 0)
+        lp_dev = {k: v for k, v in lp.items() if k != "send_idx"}
+        apply_one = lambda m, l: gnn_layer_apply(  # noqa: E731
+            spec, layer_params, m, l, num_out, is_last=(li == 0)
         )
-        h = jax.vmap(apply_one)(
-            mixed, lp["edge_src"], lp["edge_dst"], lp["edge_mask"], lp["self_pos"]
-        )
+        h = jax.vmap(apply_one)(mixed, lp_dev)
     return h
 
 
@@ -216,10 +257,7 @@ def gnn_forward_spmd(
             spec,
             params[L - 1 - li],
             mixed,
-            lp["edge_src"],
-            lp["edge_dst"],
-            lp["edge_mask"],
-            lp["self_pos"],
+            lp,
             num_out,
             is_last=(li == 0),
         )

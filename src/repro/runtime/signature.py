@@ -21,8 +21,15 @@ def plan_signature(plan: SplitPlan, cache_plan=None) -> tuple:
     key when serving — the cached step traces over them too.
     """
     fronts = tuple(ids.shape for ids in plan.front_ids)
+    # pack_perm covers the fused-kernel layout dims (DB, EB) — EB has its own
+    # high-water mark, so it must key the cache like every other traced dim
     layers = tuple(
-        (lp.edge_src.shape, lp.send_idx.shape, lp.self_pos.shape)
+        (
+            lp.edge_src.shape,
+            lp.send_idx.shape,
+            lp.self_pos.shape,
+            lp.pack_perm.shape,
+        )
         for lp in plan.layers
     )
     cache = ()

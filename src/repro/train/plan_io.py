@@ -42,6 +42,12 @@ def plan_to_device(plan: SplitPlan, cache_plan: CachePlan | None = None) -> dict
                 "edge_mask": jnp.asarray(lp.edge_mask),
                 "send_idx": jnp.asarray(lp.send_idx, jnp.int32),
                 "self_pos": jnp.asarray(lp.self_pos, jnp.int32),
+                # dst-sorted layout for the fused aggregation kernels
+                # (docs/KERNELS.md). ~2 extra E-sized index transfers per
+                # layer; XLA drops them when agg_backend == "jnp".
+                "pack_perm": jnp.asarray(lp.pack_perm, jnp.int32),
+                "pack_dst": jnp.asarray(lp.pack_dst, jnp.int32),
+                "seg_offsets": jnp.asarray(lp.seg_offsets, jnp.int32),
             }
         )
     out = {

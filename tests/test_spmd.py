@@ -110,6 +110,56 @@ def test_spmd_gnn_forward_matches_sim():
     """)
 
 
+def test_spmd_gnn_forward_pallas_backend_matches_jnp():
+    """The fused Pallas aggregation under shard_map == the jnp backend in sim
+    mode — the layer-centric kernel is the same black box on both paths
+    (docs/KERNELS.md)."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from dataclasses import replace
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.graph.datasets import make_dataset
+        from repro.graph.sampling import sample_minibatch
+        from repro.core import presample, partition_graph, build_split_plan, sim_shuffle
+        from repro.models.gnn import GNNSpec, init_gnn_params
+        from repro.models.gnn.layers import gnn_forward, gnn_forward_spmd
+        from repro.train.plan_io import plan_to_device, load_features
+
+        NDEV = 4
+        ds = make_dataset("tiny")
+        rng = np.random.default_rng(0)
+        mb = sample_minibatch(ds.graph, ds.train_ids[:16], [3, 3], rng)
+        w = presample(ds.graph, ds.train_ids, [3, 3], 16, num_epochs=1)
+        part = partition_graph(ds.graph, NDEV, method="gsplit", weights=w)
+        plan = build_split_plan(mb, part.assignment, NDEV)
+        pa = plan_to_device(plan)
+        feats = jnp.asarray(load_features(plan, ds.features))
+
+        mesh = jax.make_mesh((NDEV,), ("model",))
+        for model in ("sage", "gcn", "gat"):
+            spec = GNNSpec(model=model, in_dim=ds.spec.feat_dim, hidden_dim=16,
+                           out_dim=4, num_layers=2, num_heads=2)
+            spec_p = replace(spec, agg_backend="pallas")
+            params = init_gnn_params(jax.random.PRNGKey(0), spec)
+            ref = gnn_forward(spec, params, feats, pa, sim_shuffle)
+            def body(feats_l, pa_l):
+                pa_dev = jax.tree_util.tree_map(lambda x: x[0], pa_l)
+                out = gnn_forward_spmd(spec_p, params, feats_l[0], pa_dev, "model")
+                return out[None]
+            fn = shard_map(
+                body, mesh=mesh,
+                in_specs=(P("model"), P("model")),
+                out_specs=P("model"),
+                check_rep=False,
+            )
+            got = fn(feats, pa)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       rtol=5e-5, atol=5e-5)
+            print(model, "OK")
+    """)
+
+
 def test_spmd_cache_serving_matches_sim():
     """shard_map cache serving (sharded resident block + all-to-all remote
     fetch) == sim serving == full host gather, and the cached spmd forward
