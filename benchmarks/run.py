@@ -1,8 +1,8 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Select subsets with
-``python -m benchmarks.run [table1] [table3] [pipeline] [fig5] [presample] [kernels]
-[transformer] [roofline]``.
+``python -m benchmarks.run [table1] [table3] [pipeline] [sampler] [fig5]
+[presample] [kernels] [transformer] [roofline]``.
 """
 from __future__ import annotations
 
@@ -15,6 +15,7 @@ BENCHES = {
     "presample": ("benchmarks.presample_cost", "§7.3 — splitting algorithm cost"),
     "table3": ("benchmarks.table3_epoch_time", "Table 3 — epoch time breakdown"),
     "pipeline": ("benchmarks.pipeline_bench", "§5 — pipelined vs serial executor"),
+    "sampler": ("benchmarks.sampler_bench", "§4 — host vs device sampling"),
     "kernels": ("benchmarks.kernel_bench", "Pallas kernels vs oracle"),
     "transformer": ("benchmarks.transformer_bench", "Assigned archs (reduced)"),
     "roofline": ("benchmarks.roofline_report", "Roofline from dry-run records"),

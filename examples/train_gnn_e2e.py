@@ -31,6 +31,13 @@ def main() -> None:
         "--no-cache-serve", action="store_true",
         help="accounting-only cache (full host gather, pre-serving behavior)",
     )
+    ap.add_argument(
+        "--plan-source", default="serial",
+        choices=["serial", "pipelined", "device", "device_pipelined"],
+        help="where plans are built: host (serial/pipelined) or the "
+        "device-resident cooperative sampling engine (docs/SAMPLER.md); "
+        "device modes apply to the split trainer's epoch loop",
+    )
     args = ap.parse_args()
 
     ds = make_dataset(args.dataset)
@@ -54,7 +61,8 @@ def main() -> None:
         cache_serve=not args.no_cache_serve,
     )
     split_tr = Trainer(
-        ds, spec, TrainConfig(mode="split", cache_mode=args.cache_mode, **base)
+        ds, spec, TrainConfig(mode="split", cache_mode=args.cache_mode,
+                              plan_source=args.plan_source, **base)
     )
     dp_tr = Trainer(ds, spec, TrainConfig(mode="dp", cache_mode="distributed",
                                           **base))
@@ -62,23 +70,46 @@ def main() -> None:
     steps_done, t0 = 0, time.perf_counter()
     split_loaded = dp_loaded = 0
     losses = []
-    while steps_done < args.steps:
-        for targets in split_tr.sampler.epoch_batches():
-            if steps_done >= args.steps:
-                break
-            st = split_tr.train_iter(targets)
-            dp_st = dp_tr.train_iter(targets)
-            split_loaded += st.loaded_rows
-            dp_loaded += dp_st.loaded_rows
-            losses.append(st.loss)
-            steps_done += 1
-            if steps_done % 25 == 0:
-                print(
-                    f"step {steps_done:4d} loss={st.loss:.4f} "
-                    f"acc={st.accuracy:.2%} "
-                    f"split_loads={split_loaded} dp_loads={dp_loaded} "
-                    f"({time.perf_counter()-t0:.0f}s)"
-                )
+    if args.plan_source == "serial":
+        while steps_done < args.steps:
+            for targets in split_tr.sampler.epoch_batches():
+                if steps_done >= args.steps:
+                    break
+                st = split_tr.train_iter(targets)
+                dp_st = dp_tr.train_iter(targets)
+                split_loaded += st.loaded_rows
+                dp_loaded += dp_st.loaded_rows
+                losses.append(st.loss)
+                steps_done += 1
+                if steps_done % 25 == 0:
+                    print(
+                        f"step {steps_done:4d} loss={st.loss:.4f} "
+                        f"acc={st.accuracy:.2%} "
+                        f"split_loads={split_loaded} dp_loads={dp_loaded} "
+                        f"({time.perf_counter()-t0:.0f}s)"
+                    )
+    else:
+        # pipelined / device plan sources run through the epoch loop
+        # (DESIGN.md §6, docs/SAMPLER.md §6); the dp comparison arm trains
+        # epochs of matching length on its own keyed batch stream
+        while steps_done < args.steps:
+            st = split_tr.train_epoch(max_iters=args.steps - steps_done)
+            dp_st = dp_tr.train_epoch(max_iters=len(st.iters))
+            split_loaded += sum(i.loaded_rows for i in st.iters)
+            dp_loaded += sum(i.loaded_rows for i in dp_st.iters)
+            losses += [i.loss for i in st.iters]
+            steps_done += len(st.iters)
+            sampler_note = ""
+            if "sampler_epoch_batches" in st.pipeline:
+                eb = st.pipeline["sampler_epoch_batches"]
+                ef = st.pipeline["sampler_epoch_fallbacks"]
+                sampler_note = f" device_sampled={eb - ef}/{eb}"
+            print(
+                f"step {steps_done:4d} loss={st.iters[-1].loss:.4f} "
+                f"acc={st.iters[-1].accuracy:.2%} "
+                f"split_loads={split_loaded} dp_loads={dp_loaded}"
+                f"{sampler_note} ({time.perf_counter()-t0:.0f}s)"
+            )
 
     save_checkpoint(args.ckpt, split_tr.params, step=steps_done)
     print(f"checkpoint written to {args.ckpt}")

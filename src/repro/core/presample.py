@@ -37,13 +37,37 @@ class PresampleWeights:
         return float(self.vertex_weight.sum())
 
 
-def _accumulate(k_v: np.ndarray, k_e: np.ndarray, mb) -> None:
-    # layers l > 0 are all non-input frontiers: frontiers[0..L-1]
-    for frontier in mb.frontiers[:-1]:
-        np.add.at(k_v, frontier, 1)
-    for layer in mb.layers:
-        eids = layer.edge_id[layer.edge_id >= 0]
-        np.add.at(k_e, eids, 1)
+def _accumulate(k_v: np.ndarray, k_e: np.ndarray, mbs) -> None:
+    """Add the vertex/edge appearance counts of ``mbs`` into ``k_v``/``k_e``.
+
+    ``mbs`` is an iterable of mini-batches — typically one full epoch, which
+    is what makes the ``np.bincount`` formulation scale: the histogram runs
+    over the *sampled* indices of every batch in the call, and the dense
+    O(num_nodes + num_edges) count-array add is paid once per call instead
+    of once per batch (at full Orkut/Papers100M edge counts a per-batch
+    dense add would dominate; per epoch it amortizes to noise). Versus the
+    old per-batch ``np.add.at``: ``ufunc.at`` was historically an unbuffered
+    per-element loop and orders of magnitude slower; numpy >= 1.24 gave
+    integer ``add.at`` a fast indexed path, so ``benchmarks/presample_cost.py``
+    measures both formulations so the trade stays visible as numpy or the
+    graph scale changes.
+
+    Layers ``l > 0`` are all non-input frontiers (``frontiers[0..L-1]``);
+    self-loop sentinels (``edge_id == -1``) are not CSR edges and are
+    excluded. Only the index arrays are buffered (references into each
+    mini-batch), so a generator of samples streams through without holding
+    the epoch's samples alive.
+    """
+    vparts: list[np.ndarray] = []
+    eparts: list[np.ndarray] = []
+    for mb in mbs:
+        vparts.extend(mb.frontiers[:-1])
+        eparts.extend(layer.edge_id for layer in mb.layers)
+    verts = np.concatenate(vparts)
+    k_v += np.bincount(verts, minlength=k_v.shape[0])
+    eids = np.concatenate(eparts)
+    eids = eids[eids >= 0]
+    k_e += np.bincount(eids, minlength=k_e.shape[0])
 
 
 def presample(
@@ -65,20 +89,33 @@ def presample(
     reproducible, but they draw *different* streams: flipping the knob
     changes the weights (hence the partition and downstream trajectories).
     Keep it fixed within any experiment being compared.
+
+    Both paths iterate epochs with ``drop_last=True`` batch slicing (the
+    training default): the trailing remainder batch contributes no counts
+    unless the whole training set fits in one (short) batch — matching what
+    the trainer will actually sample, which is the load the partitioner
+    should balance.
     """
     sampler = NeighborSampler(graph, train_ids, fanouts, batch_size, seed=seed)
     if workers <= 1:
         k_v = np.zeros(graph.num_nodes, dtype=np.int64)
         k_e = np.zeros(graph.num_edges, dtype=np.int64)
         for _ in range(num_epochs):
-            for targets in sampler.epoch_batches():
-                _accumulate(k_v, k_e, sampler.sample(targets))
+            _accumulate(
+                k_v, k_e,
+                (sampler.sample(t) for t in sampler.epoch_batches()),
+            )
     else:
         def one_epoch(epoch: int):
             ev = np.zeros(graph.num_nodes, dtype=np.int64)
             ee = np.zeros(graph.num_edges, dtype=np.int64)
-            for idx, targets in enumerate(sampler.epoch_targets(epoch)):
-                _accumulate(ev, ee, sampler.sample_batch(targets, epoch, idx))
+            _accumulate(
+                ev, ee,
+                (
+                    sampler.sample_batch(t, epoch, i)
+                    for i, t in enumerate(sampler.epoch_targets(epoch))
+                ),
+            )
             return ev, ee
 
         with ThreadPoolExecutor(max_workers=workers) as pool:

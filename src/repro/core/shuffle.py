@@ -20,6 +20,28 @@ import jax
 import jax.numpy as jnp
 
 
+def sim_alltoall(send: jnp.ndarray) -> jnp.ndarray:
+    """The fixed-size all-to-all primitive, sim mode.
+
+    ``send[p, q, ...]`` is device ``p``'s equal-size block for peer ``q``;
+    with every device resident in one program the exchange is a transpose of
+    the two leading axes. The single primitive behind the layer shuffles,
+    the cache remote fetch, and the cooperative sampler's frontier exchange
+    (``repro.sampler.engine``).
+    """
+    return jnp.swapaxes(send, 0, 1)
+
+
+def spmd_alltoall(send: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """The fixed-size all-to-all primitive inside a `shard_map` body.
+
+    ``send`` is (P, ...) — one equal-size block per peer; returns (P, ...)
+    with ``recv[q]`` = peer ``q``'s block for this device (the spmd mirror
+    of ``sim_alltoall``).
+    """
+    return jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0)
+
+
 def sim_shuffle(h: jnp.ndarray, send_idx: jnp.ndarray) -> jnp.ndarray:
     """Simulated all-to-all shuffle.
 
@@ -35,7 +57,7 @@ def sim_shuffle(h: jnp.ndarray, send_idx: jnp.ndarray) -> jnp.ndarray:
     send = jnp.take_along_axis(
         h[:, None, :, :], send_idx[:, :, :, None], axis=2
     )  # (P, P, S, F) via broadcast of the needer axis
-    recv = jnp.swapaxes(send, 0, 1)  # all-to-all == transpose in sim mode
+    recv = sim_alltoall(send)
     mixed = jnp.concatenate([h, recv.reshape(P, P * S, F)], axis=1)
     return mixed
 
@@ -53,8 +75,7 @@ def spmd_shuffle(
     if S == 0:
         return h_local
     send = h_local[send_idx_local]  # (P, S, F)
-    recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0)
-    # all_to_all with split/concat 0 yields (P, S, F): recv[q] = peer q's block
+    recv = spmd_alltoall(send, axis_name)  # (P, S, F): recv[q] = q's block
     return jnp.concatenate([h_local, recv.reshape(P * S, -1)], axis=0)
 
 
@@ -93,7 +114,7 @@ def sim_serve_features(
         send = jnp.take_along_axis(
             cache_block[:, None, :, :], cplan["send_slot"][:, :, :, None], axis=2
         )  # (P_owner, P_needer, Sc, F)
-        recv = jnp.swapaxes(send, 0, 1)  # (P_needer, P_owner, Sc, F)
+        recv = sim_alltoall(send)  # (P_needer, P_owner, Sc, F)
         feats = jax.vmap(_scatter_add_rows)(
             feats,
             recv.reshape(P, -1, F),
@@ -128,7 +149,7 @@ def spmd_serve_features(
     P, Sc = cplan_local["send_slot"].shape
     if Sc:
         send = cache_local[cplan_local["send_slot"]]  # (P, Sc, F)
-        recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0)
+        recv = spmd_alltoall(send, axis_name)
         feats = _scatter_add_rows(
             feats,
             recv.reshape(P * Sc, -1),

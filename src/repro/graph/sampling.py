@@ -11,6 +11,12 @@ when ``d <= fanout``; otherwise we draw ``fanout`` uniform slots with
 replacement and de-duplicate (standard GraphSAGE neighbor sampling).
 Zero-degree vertices contribute a self-loop so every vertex has at least one
 message source.
+
+This module is the *semantic reference*: the device-resident cooperative
+sampler (``repro.sampler``, docs/SAMPLER.md) implements the same per-vertex
+semantics with a counter-based RNG and is validated against it statistically
+(chi-square) and structurally (plan invariants) in ``tests/test_sampler.py``;
+on capacity overflow it falls back to ``sample_batch`` here.
 """
 from __future__ import annotations
 
@@ -167,6 +173,18 @@ class NeighborSampler:
     def _slice_batches(
         self, ids: np.ndarray, drop_last: bool
     ) -> list[np.ndarray]:
+        """Slice a permuted id vector into target batches.
+
+        Short-batch contract (shared by both RNG disciplines, and relied on
+        by the plan sources for stable jit signatures):
+
+          * ``n <= batch_size`` -- one (short) batch, *regardless* of
+            ``drop_last``: an epoch always yields at least one batch.
+          * otherwise, ``drop_last=True`` (the default everywhere in
+            training) drops the trailing remainder so every yielded batch
+            has exactly ``batch_size`` targets; ``drop_last=False`` appends
+            the short remainder batch (offline/analysis use).
+        """
         n = ids.shape[0]
         if n <= self.batch_size:
             return [ids]  # fewer targets than a batch: one (short) batch
@@ -177,20 +195,41 @@ class NeighborSampler:
         ]
 
     def epoch_batches(self, drop_last: bool = True):
+        """Streamed-API epoch: permute + slice, advancing the shared rng.
+
+        Draw-order dependent by design (each call mutates ``self.rng``) —
+        kept for offline code that replays the historical stream. Anything
+        running under the pipelined runtime must use ``epoch_targets``.
+        """
         yield from self._slice_batches(
             self.rng.permutation(self.train_ids), drop_last
         )
 
     def sample(self, targets: np.ndarray) -> MiniBatchSample:
+        """Streamed-API sampling: consumes the shared rng in call order."""
         return sample_minibatch(self.graph, targets, self.fanouts, self.rng)
 
     def sample_micro(self, targets: np.ndarray, num_devices: int) -> list[MiniBatchSample]:
-        """Data-parallel micro-batching: partition targets, sample independently."""
+        """Data-parallel micro-batching: partition targets, sample independently.
+
+        Streamed discipline: the ``num_devices`` micro-samples consume the
+        shared rng sequentially, so results depend on call order.
+        """
         parts = np.array_split(targets, num_devices)
         return [self.sample(p) for p in parts]
 
     # ---- keyed API: order-independent draws for the pipelined runtime ---- #
     def _keyed_rng(self, *key: int) -> np.random.Generator:
+        """An independent generator derived from ``(seed, *key)``.
+
+        The keyed-RNG discipline (DESIGN.md §6): every consumer that may run
+        off-thread or out of order derives its stream from static integers —
+        ``(seed, salt, epoch, batch[, micro])`` — never from a shared
+        generator. The device sampling engine follows the same discipline
+        with a counter-based hash (``repro.sampler.rng``); its fallback path
+        calls ``sample_batch`` below, so a fallback batch is exactly the
+        batch a pure-host producer would have built.
+        """
         return np.random.default_rng((self.seed, *key))
 
     def epoch_targets(

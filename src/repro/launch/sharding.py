@@ -163,6 +163,28 @@ def split_cache_specs(cache_arrays) -> dict:
     )
 
 
+def sampler_shard_specs(dev_arrays: dict) -> dict:
+    """Device CSR shard sharding for SPMD cooperative sampling.
+
+    The per-partition CSR blocks (``indptr``/``indices``/``edge_id``,
+    leading axis P) and ``num_local`` shard over the mesh's ``model`` axis so
+    each device holds only its own partition's adjacency; the O(V) ownership
+    maps (``owner``/``local_row``) are replicated — every split must route
+    any discovered vertex to its owner in O(1)
+    (``repro.sampler.engine.sample_minibatch_spmd`` consumes the per-shard
+    slices).
+    """
+    replicated = ("owner", "local_row")
+    return {
+        k: (
+            P(*((None,) * v.ndim))
+            if k in replicated
+            else P(*(("model",) + (None,) * (v.ndim - 1)))
+        )
+        for k, v in dev_arrays.items()
+    }
+
+
 def named(tree_specs, mesh):
     """PartitionSpec tree -> NamedSharding tree."""
     from jax.sharding import NamedSharding

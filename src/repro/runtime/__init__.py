@@ -7,6 +7,8 @@ interface, with a bounded in-order prefetch queue and a plan-signature cache
 for compiled-executable reuse tracking.
 """
 from repro.runtime.plan_source import (
+    DevicePipelinedPlanSource,
+    DevicePlanSource,
     PipelinedPlanSource,
     PlanBatch,
     PlanProducer,
@@ -18,6 +20,8 @@ from repro.runtime.prefetch import OrderedPrefetcher, PrefetchStats
 from repro.runtime.signature import SignatureCache, plan_signature
 
 __all__ = [
+    "DevicePipelinedPlanSource",
+    "DevicePlanSource",
     "OrderedPrefetcher",
     "PrefetchStats",
     "PipelinedPlanSource",

@@ -11,6 +11,14 @@ the trainer behind one interface:
   * ``PipelinedPlanSource``  -- a multi-worker producer pool builds batches
     ahead of the consumer through ``OrderedPrefetcher``; a bounded reorder
     queue keeps delivery in epoch order.
+  * ``DevicePlanSource`` / ``DevicePipelinedPlanSource`` -- the same two
+    delivery disciplines with the *sampling* stage running on device
+    (``repro.sampler``, docs/SAMPLER.md): the producer hands targets to the
+    cooperative sampling engine and assembles the returned frontier/edge
+    blocks into the standard ``SplitPlan``, so repadding, signatures, and
+    the trainer are untouched. Device-mode capacity growth is applied at
+    source creation (epoch boundary) — never mid-epoch — which keeps the
+    serial == pipelined contract intact for device sampling too.
 
 Both sources derive one RNG stream *per batch* from ``(seed, epoch, index)``
 (see ``NeighborSampler.sample_batch``), so their sampled batches are
@@ -88,11 +96,14 @@ class PlanProducer:
         assignment: np.ndarray | None = None,
         cache: FeatureCache | None = None,
         serve_cache: bool = True,
+        device_sampler=None,  # repro.sampler.DeviceSampler | None
     ):
         if mode not in ("split", "dp", "pushpull"):
             raise ValueError(f"unknown mode {mode!r}")
         if mode == "split" and assignment is None:
             raise ValueError("split mode needs a partition assignment")
+        if device_sampler is not None and mode != "split":
+            raise ValueError("device sampling is split-mode only")
         self.sampler = sampler
         self.features = features
         self.labels = labels
@@ -102,6 +113,7 @@ class PlanProducer:
         self.assignment = assignment
         self.cache = cache
         self.serve_cache = serve_cache
+        self.device_sampler = device_sampler
 
     def build(self, epoch: int, index: int, targets: np.ndarray) -> PlanBatch:
         from repro.train.plan_io import load_labels, stage_host_features
@@ -114,7 +126,13 @@ class PlanProducer:
             t1 = time.perf_counter()
             plan = build_dp_plan(samples, pad_multiple=self.pad_multiple)
         else:
-            sample = self.sampler.sample_batch(targets, epoch, index)
+            # device mode: the cooperative engine samples on-accelerator and
+            # falls back to the host sampler's keyed API on cap overflow —
+            # both are pure functions of (seed, epoch, index)
+            if self.device_sampler is not None:
+                sample = self.device_sampler.sample_batch(targets, epoch, index)
+            else:
+                sample = self.sampler.sample_batch(targets, epoch, index)
             t1 = time.perf_counter()
             plan = build_split_plan(
                 sample,
@@ -269,6 +287,47 @@ class PipelinedPlanSource(PlanSource):
         return out
 
 
+class _DeviceSourceMixin:
+    """Shared device-mode discipline for both delivery flavors.
+
+    Capacity high-water-mark growth is applied exactly once, when iteration
+    starts (the epoch boundary): within the epoch every producer thread sees
+    one frozen capacity table, so which batches overflow — and fall back to
+    the host sampler — is reproducible and delivery-order independent.
+    """
+
+    def _device_sampler(self):
+        eng = self.producer.device_sampler
+        if eng is None:
+            raise ValueError(
+                "device plan source needs a PlanProducer with a device_sampler"
+            )
+        return eng
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out.update(self._device_sampler().stats())
+        return out
+
+
+@dataclass
+class DevicePlanSource(_DeviceSourceMixin, SerialPlanSource):
+    """Inline delivery; sampling runs on the device engine."""
+
+    def __iter__(self) -> Iterator[PlanBatch]:
+        self._device_sampler().refresh_caps()
+        yield from SerialPlanSource.__iter__(self)
+
+
+@dataclass
+class DevicePipelinedPlanSource(_DeviceSourceMixin, PipelinedPlanSource):
+    """Pipelined delivery; producer threads share the jitted device engine."""
+
+    def __iter__(self) -> Iterator[PlanBatch]:
+        self._device_sampler().refresh_caps()
+        yield from PipelinedPlanSource.__iter__(self)
+
+
 def make_plan_source(
     kind: str,
     producer: PlanProducer,
@@ -285,4 +344,13 @@ def make_plan_source(
         return PipelinedPlanSource(
             producer, epoch, batches, hwm, sig_cache, depth, workers
         )
-    raise ValueError(f"unknown plan source {kind!r} (serial | pipelined)")
+    if kind == "device":
+        return DevicePlanSource(producer, epoch, batches, hwm, sig_cache)
+    if kind == "device_pipelined":
+        return DevicePipelinedPlanSource(
+            producer, epoch, batches, hwm, sig_cache, depth, workers
+        )
+    raise ValueError(
+        f"unknown plan source {kind!r} "
+        "(serial | pipelined | device | device_pipelined)"
+    )

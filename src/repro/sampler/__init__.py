@@ -1,0 +1,28 @@
+"""Device-resident cooperative sampling engine (paper §4, docs/SAMPLER.md).
+
+The host sampler (``graph.sampling``) is a numpy pipeline stage; after the
+pipelined runtime and the fused aggregation kernels it is the producer-thread
+bottleneck. This package moves the per-iteration sampling loop onto the
+accelerator as a first-class subsystem:
+
+  * ``shard``    -- padded per-partition device CSR blocks + ownership maps
+  * ``rng``      -- counter-based draws keyed by (seed, epoch, batch, layer)
+  * ``kernel``   -- the Pallas wavefront-expansion kernel (``ref`` = oracle)
+  * ``ops``      -- jit'd kernel entry point with backend dispatch
+  * ``frontier`` -- static-cap sort-based dedup and ownership routing
+  * ``engine``   -- the cooperative sampling loop (sim + spmd drivers) and
+                    ``DeviceSampler``, the producer-facing facade with
+                    capacity high-water marks and host-sampler fallback
+
+``runtime.plan_source`` exposes the engine as plan-source mode ``"device"``.
+"""
+from repro.sampler.engine import DeviceSampler, sample_minibatch_spmd
+from repro.sampler.shard import GraphShards, build_shards, shards_to_device
+
+__all__ = [
+    "DeviceSampler",
+    "GraphShards",
+    "build_shards",
+    "sample_minibatch_spmd",
+    "shards_to_device",
+]

@@ -1,0 +1,84 @@
+"""Static-cap frontier set operations (docs/SAMPLER.md §4).
+
+Device-side sampling cannot grow arrays: every set operation here has a
+static output capacity, reports the *true* element count, and raises an
+overflow flag when the capacity would truncate — the engine then falls back
+to the host sampler for that batch and doubles the cap for the next epoch
+(capacity high-water marks). Both primitives are sort-based (one
+``jnp.sort`` + cumsum bookkeeping), the device-friendly realization of
+``np.unique``:
+
+  * ``sorted_unique_capped`` -- masked multiset -> sorted unique prefix;
+  * ``bucket_by_owner``      -- masked multiset -> per-owner sorted unique
+    rows (the send/recv layout of the cooperative exchange; also used to
+    scatter the targets into per-split frontier blocks).
+
+Overflowing entries route to a dump slot past the capacity, so outputs stay
+deterministic even on overflow (the engine discards them anyway).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sorted_unique_capped(
+    vals: jnp.ndarray,  # (C,) int32
+    valid: jnp.ndarray,  # (C,) bool
+    cap: int,
+    sentinel: int,  # strictly greater than any valid value (e.g. num_nodes)
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Sorted unique valid values -> ((cap,) block, true count, overflow).
+
+    Output slots beyond ``min(count, cap)`` are zero; callers mask with
+    ``arange(cap) < count``. ``overflow`` is true iff ``count > cap``.
+    """
+    key = jnp.where(valid, vals, sentinel)
+    s = jnp.sort(key)
+    prev = jnp.concatenate([jnp.full((1,), -1, s.dtype), s[:-1]])
+    uniq = (s != prev) & (s < sentinel)
+    count = uniq.sum().astype(jnp.int32)
+    rank = jnp.cumsum(uniq) - 1
+    idx = jnp.where(uniq, jnp.minimum(rank, cap), cap)  # cap = dump slot
+    out = jnp.zeros((cap + 1,), vals.dtype).at[idx].set(s)
+    return out[:cap], jnp.minimum(count, cap), count > cap
+
+
+def bucket_by_owner(
+    vals: jnp.ndarray,  # (C,) int32 vertex ids
+    valid: jnp.ndarray,  # (C,) bool
+    owner_of: jnp.ndarray,  # (V,) int32 global ownership map
+    num_parts: int,
+    cap: int,
+    num_nodes: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Group valid values by owner -> ((P, cap) rows, (P,) counts, overflow).
+
+    Row ``q`` holds the sorted unique valid values owned by ``q`` (duplicates
+    collapse — discovering the same remote vertex through several edges sends
+    it once). The (owner, vertex) pair packs into one int32 sort key;
+    ``shard.build_shards`` guards ``P * V < 2**31``.
+    """
+    V, P = num_nodes, num_parts
+    o = owner_of[jnp.clip(vals, 0, V - 1)]
+    big = P * V
+    key = jnp.where(valid, o * V + vals, big)
+    s = jnp.sort(key)
+    prev = jnp.concatenate([jnp.full((1,), -1, s.dtype), s[:-1]])
+    uniq = (s != prev) & (s < big)
+    o_s = s // V
+    v_s = s % V
+    cnt = (
+        jnp.zeros(P + 1, jnp.int32)
+        .at[jnp.where(uniq, o_s, P)]
+        .add(1)
+    )
+    start = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(cnt[:P], dtype=jnp.int32)]
+    )[:P]
+    rank = jnp.cumsum(uniq) - 1
+    pos = rank.astype(jnp.int32) - start[jnp.clip(o_s, 0, P - 1)]
+    row = jnp.where(uniq, o_s, P)
+    col = jnp.where(uniq, jnp.minimum(pos, cap), cap)
+    buf = jnp.zeros((P + 1, cap + 1), vals.dtype).at[row, col].set(v_s)
+    overflow = jnp.any(cnt[:P] > cap)
+    return buf[:P, :cap], jnp.minimum(cnt[:P], cap), overflow

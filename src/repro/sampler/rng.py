@@ -1,0 +1,96 @@
+"""Counter-based RNG for device-side sampling (docs/SAMPLER.md §3).
+
+The host sampler draws from a ``numpy`` generator stream; a device sampler
+cannot (draws would depend on buffer layout and execution order). Instead,
+every neighbor draw is a pure function of ``(seed, epoch, batch, layer,
+vertex, slot)``:
+
+  * the first four components fold into one 32-bit *layer key* on the host
+    (``fold_key`` — cheap, once per layer per batch), and
+  * the device hashes ``(layer_key, vertex id, slot)`` to a uniform uint32
+    (``draw_u32`` — two rounds of an avalanching integer mix).
+
+Keying by *global vertex id* rather than buffer position is what makes
+device sampling deterministic under capacity growth, padding changes, and
+producer-thread scheduling: the same vertex draws the same neighbors no
+matter where it sits in the frontier buffer. The mixer is the "lowbias32"
+finalizer (full avalanche; passes the chi-square gate in
+``tests/test_sampler.py``). Modulo reduction onto the degree keeps the whole
+path in 32-bit integers (TPU-friendly); the bias is O(degree / 2^32) —
+orders of magnitude below what any statistical test here could resolve.
+
+The per-(epoch, batch, layer) key is **64 bits wide** — two independently
+folded uint32 lanes (``fold_key_pair``), both absorbed by ``draw_u32``. A
+single 32-bit key would birthday-collide across ~77k distinct batch/layer
+tuples (a few epochs on a large training set), silently correlating the
+draws of different mini-batches; two lanes push the bound to ~2^32 tuples.
+
+Everything in this module is shared verbatim by the Pallas kernel body and
+the pure-jnp reference, so the two backends are bit-identical by
+construction.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_M1 = 0x7FEB352D
+_M2 = 0x846CA68B
+_GOLDEN = 0x9E3779B9
+_FNV = 0x01000193
+
+
+def _mix32_py(x: int) -> int:
+    """lowbias32 on a python int (host-side key folding)."""
+    x &= 0xFFFFFFFF
+    x ^= x >> 16
+    x = (x * _M1) & 0xFFFFFFFF
+    x ^= x >> 15
+    x = (x * _M2) & 0xFFFFFFFF
+    x ^= x >> 16
+    return x
+
+
+_SALT_HI = 0x243F6A88  # decorrelates the high key lane from the low one
+
+
+def fold_key(*parts: int) -> int:
+    """Fold integers (seed, epoch, batch, layer, ...) into one uint32 word.
+
+    FNV-style absorb + full remix per component, so nearby (epoch, batch)
+    tuples land in unrelated keys.
+    """
+    h = 0x811C9DC5
+    for p in parts:
+        h = _mix32_py((h ^ (int(p) & 0xFFFFFFFF)) * _FNV)
+    return h
+
+
+def fold_key_pair(*parts: int) -> tuple[int, int]:
+    """The 64-bit draw key: two uint32 lanes folded under different salts."""
+    return fold_key(*parts), fold_key(_SALT_HI, *parts)
+
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """lowbias32 avalanche on uint32 arrays (works inside Pallas kernels)."""
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(_M1)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(_M2)
+    x = x ^ (x >> 16)
+    return x
+
+
+def draw_u32(
+    vid: jnp.ndarray,
+    slot: jnp.ndarray,
+    key_lo: jnp.ndarray,
+    key_hi: jnp.ndarray,
+) -> jnp.ndarray:
+    """Uniform uint32 for (vertex, slot) under the 64-bit layer key.
+
+    ``vid``/``slot``/keys may broadcast against each other; all uint32.
+    Three dependent mix rounds: (vid, low lane), the high lane, the slot.
+    """
+    h = mix32(vid ^ key_lo)
+    h = mix32(h ^ key_hi)
+    return mix32(h + slot * jnp.uint32(_GOLDEN))

@@ -65,9 +65,15 @@ class TrainConfig:
     cache_capacity_per_device: int = 0
     cache_serve: bool = True  # serve hits from the device-resident block
     #   (False = legacy accounting-only cache: full host gather every step)
-    plan_source: str = "serial"  # serial | pipelined (DESIGN.md §6)
+    # serial | pipelined (DESIGN.md §6) | device | device_pipelined — the
+    # ``device*`` kinds run the sampling stage on the accelerator via the
+    # cooperative engine (repro.sampler, docs/SAMPLER.md); split mode only.
+    # The legacy inline path (``train_iter``) always samples on host.
+    plan_source: str = "serial"
     pipeline_depth: int = 4  # max in-flight batches (pipelined source)
     plan_workers: int = 2  # producer threads (pipelined source)
+    sampler_backend: str = "pallas"  # device sampling kernel: pallas | jnp
+    sampler_interpret: bool = True  # pallas: interpret mode (CPU); False on TPU
     seed: int = 0
 
 
@@ -208,6 +214,22 @@ class Trainer:
         self._pad_hwm: dict = {}  # high-water-mark padding (stable jit sigs)
         self._epoch = 0  # epochs consumed via train_epoch (keyed RNG input)
         self.sig_cache = SignatureCache()
+        self.device_sampler = None
+        if cfg.plan_source in ("device", "device_pipelined"):
+            from repro.sampler import DeviceSampler
+
+            if cfg.mode != "split":
+                raise ValueError("plan_source 'device' requires mode='split'")
+            self.device_sampler = DeviceSampler(
+                dataset.graph,
+                self.partition.assignment,
+                cfg.num_devices,
+                list(cfg.fanouts),
+                cfg.seed,
+                host_sampler=self.sampler,
+                backend=cfg.sampler_backend,
+                interpret=cfg.sampler_interpret,
+            )
         self.producer = PlanProducer(
             self.sampler,
             dataset.features,
@@ -218,6 +240,7 @@ class Trainer:
             assignment=self.partition.assignment if self.partition else None,
             cache=self.cache,
             serve_cache=self.cache_block is not None,
+            device_sampler=self.device_sampler,
         )
 
     # ------------------------------------------------------------------ #
