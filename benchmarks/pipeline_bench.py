@@ -17,6 +17,18 @@ hit rate, the host rows/bytes avoided vs the uncached arm, and a numerics
 check (the cached warmup epoch must walk the exact float trajectory of the
 uncached one — serving is bit-exact, not approximate).
 
+The split-mode ``overlap`` arms measure the §3a overlap-aware shuffle:
+``overlap`` runs split local/remote aggregation with an fp32 wire (one
+chunk), ``overlap_bf16`` adds feature-axis chunking plus the bf16 wire
+format. Both report the *modeled* wire bytes per step
+(``trainer.modeled_wire_bytes`` — true cross-split rows x payload width x
+wire element size; this container has no NVLink, so bytes are the §7
+channel model, wall time is the CPU schedule) and the bf16 row reports its
+reduction vs the fp32 wire. ``--smoke`` gates on numerics: the fp32-wire
+overlap epoch must track the blocking baseline within fp tolerance (split
+aggregation only reassociates the edge reduction), every arm must stay
+finite (NaN gate), and the bf16 wire must model >= 1.9x fewer bytes.
+
 Methodology notes for a noisy shared container:
 
   * all arms of a mode run *alternately* (paired rounds), so slow machine
@@ -30,6 +42,8 @@ Methodology notes for a noisy shared container:
     per-round paired ratios reported alongside.
 """
 from __future__ import annotations
+
+import numpy as np
 
 from benchmarks.common import Row
 from repro.graph.datasets import make_dataset
@@ -53,12 +67,14 @@ MODE_SCALE = {
 SMOKE_SCALE = dict(batch_size=32, hidden=16, fanouts=(4, 4))
 
 
-def _trainer(ds, spec, mode, scale, source, cache_mode="none", cache_cap=0):
+def _trainer(ds, spec, mode, scale, source, cache_mode="none", cache_cap=0,
+             overlap=False, chunks=1, wire="float32"):
     cfg = TrainConfig(
         mode=mode, num_devices=NUM_DEVICES, fanouts=scale["fanouts"],
         batch_size=scale["batch_size"], presample_epochs=2, seed=0,
         plan_source=source, pipeline_depth=2, plan_workers=1,
         cache_mode=cache_mode, cache_capacity_per_device=cache_cap,
+        shuffle_overlap=overlap, shuffle_chunks=chunks, wire_dtype=wire,
     )
     return Trainer(ds, spec, cfg)
 
@@ -85,6 +101,15 @@ def run(modes=("split", "dp"), dataset="orkut-s", rounds=ROUNDS,
                 cache_mode="partitioned",
                 cache_cap=ds.graph.num_nodes // (2 * NUM_DEVICES),
             )
+            # §3a overlap schedule: split aggregation (fp32 wire), then
+            # + feature-axis chunking + the bf16 wire format
+            trainers["overlap"] = _trainer(
+                ds, spec, mode, scale, "pipelined", overlap=True,
+            )
+            trainers["overlap_bf16"] = _trainer(
+                ds, spec, mode, scale, "pipelined", overlap=True,
+                chunks=4, wire="bfloat16",
+            )
 
         warm = {}
         for source, tr in trainers.items():
@@ -94,6 +119,24 @@ def run(modes=("split", "dp"), dataset="orkut-s", rounds=ROUNDS,
             plain = [(i.loss, i.accuracy) for i in warm["pipelined"].iters]
             cached = [(i.loss, i.accuracy) for i in warm["cached"].iters]
             assert cached == plain, "cache serving drifted from host gather"
+        if "overlap" in warm:
+            # exact-numerics/NaN gate for the overlap schedule: fp32-wire
+            # split aggregation only reassociates the per-destination edge
+            # reduction, so its trajectory must track the blocking baseline
+            # to fp tolerance; every arm must stay finite
+            plain = np.array([i.loss for i in warm["pipelined"].iters])
+            ovl = np.array([i.loss for i in warm["overlap"].iters])
+            assert np.allclose(ovl, plain, rtol=2e-4, atol=2e-5), (
+                f"overlap drifted from blocking baseline: {ovl} vs {plain}"
+            )
+            for arm in ("overlap", "overlap_bf16"):
+                arm_losses = np.array([i.loss for i in warm[arm].iters])
+                assert np.isfinite(arm_losses).all(), f"{arm}: NaN/Inf loss"
+            wb32 = sum(i.wire_bytes for i in warm["overlap"].iters)
+            wb16 = sum(i.wire_bytes for i in warm["overlap_bf16"].iters)
+            assert wb16 and wb32 / wb16 >= 1.9, (
+                f"bf16 wire models only {wb32 / max(wb16, 1):.2f}x fewer bytes"
+            )
 
         best = {name: float("inf") for name in trainers}
         counts: dict = {}  # summed over all rounds (each round = one epoch)
@@ -109,9 +152,10 @@ def run(modes=("split", "dp"), dataset="orkut-s", rounds=ROUNDS,
                 acc = counts.setdefault(source, {})
                 tot = st.totals()
                 for k in ("loaded_rows", "load_local_hit",
-                          "load_remote_hit", "load_host_miss"):
+                          "load_remote_hit", "load_host_miss", "wire_bytes"):
                     if k in tot:
                         acc[k] = acc.get(k, 0) + int(tot[k])
+                acc["steps"] = acc.get("steps", 0) + len(st.iters)
                 if source == "pipelined":
                     qstats = st.pipeline or qstats
                 elif source == "serial":
@@ -161,6 +205,33 @@ def run(modes=("split", "dp"), dataset="orkut-s", rounds=ROUNDS,
                     f"host_rows={miss}/{loaded} "
                     f"host_MB_avoided={avoided_mb:.1f} "
                     f"numerics=exact",
+                )
+            )
+        if "overlap" in trainers:
+            wb = {
+                arm: counts[arm]["wire_bytes"] / max(counts[arm]["steps"], 1)
+                for arm in ("overlap", "overlap_bf16")
+            }
+            rows.append(
+                Row(
+                    f"pipeline/{dataset}/{mode}/overlap",
+                    best["overlap"] * 1e6,
+                    f"steady step={best['overlap']*1e3:.1f}ms "
+                    f"vs_blocking={best['pipelined']/best['overlap']:.2f}x "
+                    f"wire_KB_per_step={wb['overlap']/1e3:.1f} "
+                    f"split_agg=local+remote chunks=1 wire=fp32",
+                )
+            )
+            rows.append(
+                Row(
+                    f"pipeline/{dataset}/{mode}/overlap_bf16",
+                    best["overlap_bf16"] * 1e6,
+                    f"steady step={best['overlap_bf16']*1e3:.1f}ms "
+                    f"vs_blocking={best['pipelined']/best['overlap_bf16']:.2f}x "
+                    f"wire_KB_per_step={wb['overlap_bf16']/1e3:.1f} "
+                    f"wire_reduction="
+                    f"{wb['overlap']/max(wb['overlap_bf16'], 1):.2f}x "
+                    f"chunks=4 wire=bf16",
                 )
             )
     return rows

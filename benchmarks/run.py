@@ -2,13 +2,15 @@
 
 Prints ``name,us_per_call,derived`` CSV. Select subsets with
 ``python -m benchmarks.run [table1] [table3] [pipeline] [sampler] [fig5]
-[presample] [kernels] [transformer] [roofline]``.
+[presample] [kernels] [transformer] [roofline] [overlap_smoke]``.
 """
 from __future__ import annotations
 
 import sys
 import time
 
+# name -> (module, title[, run() kwargs]); the optional kwargs let an entry
+# pin a module's gate configuration (e.g. the overlap smoke gate)
 BENCHES = {
     "table1": ("benchmarks.table1_redundancy", "Table 1 — micro/mini redundancy"),
     "fig5": ("benchmarks.fig5_partition_quality", "Fig. 5 — partitioner quality"),
@@ -19,6 +21,14 @@ BENCHES = {
     "kernels": ("benchmarks.kernel_bench", "Pallas kernels vs oracle"),
     "transformer": ("benchmarks.transformer_bench", "Assigned archs (reduced)"),
     "roofline": ("benchmarks.roofline_report", "Roofline from dry-run records"),
+    # one tiny split-mode round with the overlap arms' exact-numerics/NaN
+    # gate and the bf16 wire-byte reduction assert (DESIGN.md §3a); same
+    # checks as `python -m benchmarks.pipeline_bench --smoke`
+    "overlap_smoke": (
+        "benchmarks.pipeline_bench",
+        "§3a — overlap/wire-format smoke gate",
+        {"modes": ("split",), "dataset": "tiny", "rounds": 1, "smoke": True},
+    ),
 }
 
 
@@ -29,11 +39,12 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = []
     for name in names:
-        mod_name, title = BENCHES[name]
+        mod_name, title, *rest = BENCHES[name]
+        kwargs = rest[0] if rest else {}
         t0 = time.perf_counter()
         try:
             mod = importlib.import_module(mod_name)
-            for row in mod.run():
+            for row in mod.run(**kwargs):
                 print(row.csv(), flush=True)
         except Exception as e:  # noqa: BLE001
             failures.append((name, repr(e)))

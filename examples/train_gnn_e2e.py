@@ -38,6 +38,21 @@ def main() -> None:
         "device-resident cooperative sampling engine (docs/SAMPLER.md); "
         "device modes apply to the split trainer's epoch loop",
     )
+    ap.add_argument(
+        "--overlap", action="store_true",
+        help="overlap-aware shuffle: split local/remote aggregation per "
+        "layer (DESIGN.md §3a)",
+    )
+    ap.add_argument(
+        "--shuffle-chunks", type=int, default=1,
+        help="feature-axis tiles per layer all-to-all (double-buffered "
+        "exchange; >1 only meaningful with --overlap)",
+    )
+    ap.add_argument(
+        "--wire-dtype", default="float32",
+        choices=["float32", "bfloat16", "float16"],
+        help="wire format for shuffled rows (fp32 accumulation throughout)",
+    )
     args = ap.parse_args()
 
     ds = make_dataset(args.dataset)
@@ -62,7 +77,10 @@ def main() -> None:
     )
     split_tr = Trainer(
         ds, spec, TrainConfig(mode="split", cache_mode=args.cache_mode,
-                              plan_source=args.plan_source, **base)
+                              plan_source=args.plan_source,
+                              shuffle_overlap=args.overlap,
+                              shuffle_chunks=args.shuffle_chunks,
+                              wire_dtype=args.wire_dtype, **base)
     )
     dp_tr = Trainer(ds, spec, TrainConfig(mode="dp", cache_mode="distributed",
                                           **base))

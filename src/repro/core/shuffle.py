@@ -19,30 +19,85 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+#: dtypes a shuffled row may travel in. Rows are down-cast immediately
+#: before the all-to-all and up-cast to the compute dtype immediately after,
+#: so every accumulation stays fp32 — only the bytes-on-wire change
+#: (DESIGN.md §3a). ``float32`` is the identity wire (bit-exact).
+WIRE_DTYPES = ("float32", "bfloat16", "float16")
 
-def sim_alltoall(send: jnp.ndarray) -> jnp.ndarray:
+
+def wire_cast(send: jnp.ndarray, wire_dtype: str | None):
+    """Down-cast a float payload to the wire dtype; returns (wire, restore).
+
+    The single choke point for the wire format, shared by the layer
+    shuffles, the cache remote fetch, and the sampler's frontier exchange.
+    Integer payloads (frontier vertex ids) pass through untouched — ids must
+    never be quantized — as does a ``wire_dtype`` of None/"float32". The
+    ``restore`` dtype is the payload's original dtype: callers up-cast the
+    received block back before accumulating.
+    """
+    if wire_dtype in (None, "float32"):
+        return send, send.dtype
+    if wire_dtype not in WIRE_DTYPES:
+        raise ValueError(f"unknown wire dtype {wire_dtype!r} ({WIRE_DTYPES})")
+    if not jnp.issubdtype(send.dtype, jnp.floating):
+        return send, send.dtype
+    return send.astype(wire_dtype), send.dtype
+
+
+def sim_alltoall(
+    send: jnp.ndarray, wire_dtype: str | None = None
+) -> jnp.ndarray:
     """The fixed-size all-to-all primitive, sim mode.
 
     ``send[p, q, ...]`` is device ``p``'s equal-size block for peer ``q``;
     with every device resident in one program the exchange is a transpose of
     the two leading axes. The single primitive behind the layer shuffles,
     the cache remote fetch, and the cooperative sampler's frontier exchange
-    (``repro.sampler.engine``).
+    (``repro.sampler.engine``). ``wire_dtype`` down-casts float payloads for
+    the wire and restores the payload dtype on receipt (``wire_cast``).
     """
-    return jnp.swapaxes(send, 0, 1)
+    wire, restore = wire_cast(send, wire_dtype)
+    return jnp.swapaxes(wire, 0, 1).astype(restore)
 
 
-def spmd_alltoall(send: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+def spmd_alltoall(
+    send: jnp.ndarray, axis_name: str, wire_dtype: str | None = None
+) -> jnp.ndarray:
     """The fixed-size all-to-all primitive inside a `shard_map` body.
 
     ``send`` is (P, ...) — one equal-size block per peer; returns (P, ...)
     with ``recv[q]`` = peer ``q``'s block for this device (the spmd mirror
-    of ``sim_alltoall``).
+    of ``sim_alltoall``, including the wire-dtype contract).
     """
-    return jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0)
+    wire, restore = wire_cast(send, wire_dtype)
+    out = jax.lax.all_to_all(wire, axis_name, split_axis=0, concat_axis=0)
+    return out.astype(restore)
 
 
-def sim_shuffle(h: jnp.ndarray, send_idx: jnp.ndarray) -> jnp.ndarray:
+def chunk_slices(width: int, chunks: int, align: int = 1) -> list[slice]:
+    """Static feature-axis tiling for the chunked overlapped exchange.
+
+    Splits ``[0, width)`` into at most ``chunks`` contiguous slices whose
+    boundaries are multiples of ``align`` (GAT requires head-aligned chunks
+    so each chunk carries whole heads). Python ints only — the tiling is
+    part of the traced program structure, never data-dependent.
+    """
+    if chunks <= 1 or width <= align:
+        return [slice(0, width)]
+    blocks = width // align  # align divides width at every call site
+    per = -(-blocks // chunks)
+    out = []
+    for start in range(0, blocks, per):
+        lo = start * align
+        hi = min((start + per) * align, width)
+        out.append(slice(lo, hi))
+    return out
+
+
+def sim_shuffle(
+    h: jnp.ndarray, send_idx: jnp.ndarray, wire_dtype: str | None = None
+) -> jnp.ndarray:
     """Simulated all-to-all shuffle.
 
     h        -- (P, N, F) local row blocks at the source depth
@@ -57,13 +112,16 @@ def sim_shuffle(h: jnp.ndarray, send_idx: jnp.ndarray) -> jnp.ndarray:
     send = jnp.take_along_axis(
         h[:, None, :, :], send_idx[:, :, :, None], axis=2
     )  # (P, P, S, F) via broadcast of the needer axis
-    recv = sim_alltoall(send)
+    recv = sim_alltoall(send, wire_dtype)
     mixed = jnp.concatenate([h, recv.reshape(P, P * S, F)], axis=1)
     return mixed
 
 
 def spmd_shuffle(
-    h_local: jnp.ndarray, send_idx_local: jnp.ndarray, axis_name: str
+    h_local: jnp.ndarray,
+    send_idx_local: jnp.ndarray,
+    axis_name: str,
+    wire_dtype: str | None = None,
 ) -> jnp.ndarray:
     """shard_map-mode shuffle (runs inside a `shard_map` body).
 
@@ -75,8 +133,57 @@ def spmd_shuffle(
     if S == 0:
         return h_local
     send = h_local[send_idx_local]  # (P, S, F)
-    recv = spmd_alltoall(send, axis_name)  # (P, S, F): recv[q] = q's block
+    recv = spmd_alltoall(send, axis_name, wire_dtype)  # recv[q] = q's block
     return jnp.concatenate([h_local, recv.reshape(P * S, -1)], axis=0)
+
+
+class SimComm:
+    """Exchange adapter for the overlapped layer schedule, sim mode.
+
+    The overlapped executor (``models.gnn.layers._gnn_layer_overlap``) is
+    written once in per-device terms; the adapter supplies the three points
+    where the two execution modes differ: batching per-device math over the
+    leading P axis, gathering the send buffer, and the all-to-all itself.
+    ``exchange`` returns the *recv region* — ``(P, P*S, Fc)`` here,
+    ``(P*S, Fc)`` in spmd — which remote-half ``redge_src`` entries index
+    directly (recv-relative coordinates, DESIGN.md §3a).
+    """
+
+    def vmap(self, fn):
+        return jax.vmap(fn)
+
+    def send_gather(self, rows: jnp.ndarray, send_idx: jnp.ndarray):
+        # send[q, p, s, :] = rows[q, send_idx[q, p, s], :]
+        return jnp.take_along_axis(
+            rows[:, None, :, :], send_idx[:, :, :, None], axis=2
+        )
+
+    def exchange(self, send: jnp.ndarray, wire_dtype: str | None):
+        recv = sim_alltoall(send, wire_dtype)  # (P, P, S, Fc)
+        P = recv.shape[0]
+        return recv.reshape(P, -1, recv.shape[-1])
+
+
+class SpmdComm:
+    """Exchange adapter for the overlapped layer schedule inside shard_map.
+
+    Per-device math runs unbatched; the all-to-all is ``jax.lax.all_to_all``
+    over the mesh axis. Mirrors ``SimComm`` exactly — tests pin sim == spmd
+    for the overlapped forward and its gradients.
+    """
+
+    def __init__(self, axis_name: str):
+        self.axis_name = axis_name
+
+    def vmap(self, fn):
+        return fn
+
+    def send_gather(self, rows: jnp.ndarray, send_idx: jnp.ndarray):
+        return rows[send_idx]  # (P, S, Fc)
+
+    def exchange(self, send: jnp.ndarray, wire_dtype: str | None):
+        recv = spmd_alltoall(send, self.axis_name, wire_dtype)  # (P, S, Fc)
+        return recv.reshape(-1, recv.shape[-1])
 
 
 def _scatter_add_rows(
@@ -93,14 +200,21 @@ def _scatter_add_rows(
 
 
 def sim_serve_features(
-    cache_block: jnp.ndarray, cplan: dict, miss_feats: jnp.ndarray
+    cache_block: jnp.ndarray,
+    cplan: dict,
+    miss_feats: jnp.ndarray,
+    wire_dtype: str | None = None,
 ) -> jnp.ndarray:
     """Assemble the input-feature block from the resident cache (sim mode).
 
     cache_block -- (P, C, F) device-resident rows (trainer setup, static)
     cplan       -- device arrays of a ``graph.cache.CachePlan``
     miss_feats  -- (P, M, F) host-gathered miss rows (padding rows zeroed)
+    wire_dtype  -- wire format for the remote-hit all-to-all; fp32 keeps the
+                   bit-identical-to-``load_features`` guarantee, bf16/fp16
+                   quantize only the remotely fetched rows
     returns     -- (P, N_L, F), bit-identical to ``plan_io.load_features``
+                   when the wire is fp32
     """
     P, _, F = cache_block.shape
     local_slot = cplan["local_slot"]  # (P, N)
@@ -114,7 +228,7 @@ def sim_serve_features(
         send = jnp.take_along_axis(
             cache_block[:, None, :, :], cplan["send_slot"][:, :, :, None], axis=2
         )  # (P_owner, P_needer, Sc, F)
-        recv = sim_alltoall(send)  # (P_needer, P_owner, Sc, F)
+        recv = sim_alltoall(send, wire_dtype)  # (P_needer, P_owner, Sc, F)
         feats = jax.vmap(_scatter_add_rows)(
             feats,
             recv.reshape(P, -1, F),
@@ -133,6 +247,7 @@ def spmd_serve_features(
     cplan_local: dict,
     miss_feats_local: jnp.ndarray,
     axis_name: str,
+    wire_dtype: str | None = None,
 ) -> jnp.ndarray:
     """shard_map-mode feature serving (runs inside a `shard_map` body).
 
@@ -141,6 +256,7 @@ def spmd_serve_features(
                         ``send_slot`` keeps its needer axis, ``recv_pos`` /
                         ``recv_mask`` their owner axis — both (P, Sc))
     miss_feats_local -- (M, F) this device's host-gathered miss rows
+    wire_dtype       -- wire format for the remote fetch (``wire_cast``)
     returns          -- (N_L, F) served input rows
     """
     local_mask = cplan_local["local_mask"]
@@ -149,7 +265,7 @@ def spmd_serve_features(
     P, Sc = cplan_local["send_slot"].shape
     if Sc:
         send = cache_local[cplan_local["send_slot"]]  # (P, Sc, F)
-        recv = spmd_alltoall(send, axis_name)
+        recv = spmd_alltoall(send, axis_name, wire_dtype)
         feats = _scatter_add_rows(
             feats,
             recv.reshape(P * Sc, -1),

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.shuffle import SimComm, SpmdComm, chunk_slices
 from repro.kernels import segment_ops
 from repro.kernels.gather_segsum import ops as gather_ops
 
@@ -33,6 +34,17 @@ class GNNSpec:
     # gather->segment-aggregate kernels over the plan's dst-sorted layout.
     agg_backend: str = "jnp"  # jnp | pallas
     agg_interpret: bool = True  # pallas: interpret mode (CPU); False on TPU
+    # Overlap-aware shuffle schedule (DESIGN.md §3a). ``overlap`` switches
+    # the per-layer step from blocking shuffle->aggregate to split
+    # aggregation: the local-src half is aggregated from the device's own
+    # rows while the all-to-all for the remote-src half is in flight.
+    # ``shuffle_chunks`` tiles that all-to-all along the feature axis so
+    # chunk k+1's exchange can fly while chunk k's remote partial
+    # aggregation runs. ``wire_dtype`` down-casts only the rows on the wire
+    # (fp32 accumulation everywhere); fp32 wire is bit-exact.
+    overlap: bool = False
+    shuffle_chunks: int = 1
+    wire_dtype: str = "float32"  # float32 | bfloat16 | float16
     dtype: str = "float32"
 
     def layer_dims(self) -> list[tuple[int, int]]:
@@ -155,9 +167,17 @@ def gnn_layer_apply(
         H, dh = w.shape[1], w.shape[2]
         wh = jnp.einsum("mf,fhd->mhd", mixed, w)  # (M, H, dh)
         s_src = jnp.einsum("mhd,hd->mh", wh, layer_params["a_src"])  # (M, H)
-        s_dst = jnp.einsum("mhd,hd->mh", wh, layer_params["a_dst"])
+        # dst-order scores, computed once per layer: destinations are local
+        # rows (``self_pos``), so only N_i of the M mixed rows ever
+        # contribute an a_dst score. Scoring ``wh[self_pos]`` directly is
+        # bit-identical per row to the old full (M, H) score table and
+        # replaces the chained dependent gathers ``s_dst[self_pos][edge_dst]``
+        # with one (N_i, H) table and a single (E, H) gather.
+        s_dst_n = jnp.einsum(
+            "nhd,hd->nh", wh[self_pos], layer_params["a_dst"]
+        )  # (N_i, H)
         logits = jax.nn.leaky_relu(
-            s_src[edge_src] + s_dst[self_pos][edge_dst], negative_slope=0.2
+            s_src[edge_src] + s_dst_n[edge_dst], negative_slope=0.2
         )  # (E, H)
         # softmax normalization stays on the (E, H) jnp path in both
         # backends: it is H/dh-times smaller than the feature traffic, and
@@ -177,26 +197,221 @@ def gnn_layer_apply(
     return out
 
 
+def _half_sum(spec: GNNSpec, rows: jnp.ndarray, lp: dict, side: str,
+              num_out: int) -> jnp.ndarray:
+    """Per-device partial sum over one edge half (``side`` in {"l", "r"}).
+
+    ``rows`` is the half's source space: the local row block for "l", the
+    recv region for "r" (half ``*edge_src`` entries index it directly). A
+    zero-width half (static) contributes exact zeros — the all-local dp
+    plan and the no-cross-edges batch both hit this path.
+    """
+    src = lp[f"{side}edge_src"]
+    if src.shape[0] == 0:
+        return jnp.zeros((num_out, rows.shape[-1]), rows.dtype)
+    if spec.agg_backend == "pallas":
+        return gather_ops.gather_segment_sum(
+            rows, src, lp[f"{side}pack_perm"], lp[f"{side}pack_dst"],
+            num_out, interpret=spec.agg_interpret,
+        )
+    h_src = rows[src]
+    return segment_ops.segment_sum(
+        h_src, lp[f"{side}edge_dst"], lp[f"{side}edge_mask"], num_out
+    )
+
+
+def _half_weighted(spec: GNNSpec, rows: jnp.ndarray, alpha_half: jnp.ndarray,
+                   lp: dict, side: str, num_out: int, dh: int) -> jnp.ndarray:
+    """Per-device weighted partial sum over one edge half (GAT).
+
+    ``rows (R, Hc*dh)`` carries whole heads (chunk boundaries are
+    dh-aligned); ``alpha_half (EW, Hc)`` is the half's attention weights
+    sliced to the chunk's heads. Padding slots are killed by the half mask
+    (jnp) or the pack sentinel (pallas), so stale alpha values at masked
+    positions are never read.
+    """
+    src = lp[f"{side}edge_src"]
+    if src.shape[0] == 0:
+        return jnp.zeros((num_out, rows.shape[-1]), rows.dtype)
+    if spec.agg_backend == "pallas":
+        return gather_ops.gather_weighted_segsum(
+            rows, alpha_half, src, lp[f"{side}pack_perm"],
+            lp[f"{side}pack_dst"], num_out, interpret=spec.agg_interpret,
+        )
+    E, Hc = alpha_half.shape
+    msg = rows[src].reshape(E, Hc, dh) * alpha_half[:, :, None]
+    return segment_ops.segment_sum(
+        msg.reshape(E, Hc * dh), lp[f"{side}edge_dst"],
+        lp[f"{side}edge_mask"], num_out,
+    )
+
+
+def _gnn_layer_overlap(
+    spec: GNNSpec,
+    layer_params: dict,
+    h: jnp.ndarray,  # (P, N, F) sim / (N, F) spmd — local rows, depth i+1
+    lp: dict,  # LayerPlan arrays (leading P axis in sim, sliced in spmd)
+    num_out: int,
+    is_last: bool,
+    comm,  # core.shuffle.SimComm | SpmdComm
+) -> jnp.ndarray:
+    """One GNN layer under the overlap schedule (DESIGN.md §3a).
+
+    Split aggregation: the local-src half of the edge set is aggregated
+    from the device's own row block while the all-to-all for the remote
+    half is in flight; the exchange is tiled along the feature axis
+    (``spec.shuffle_chunks``) so chunk k+1 flies while chunk k's remote
+    partial aggregation runs, and rows travel in ``spec.wire_dtype``
+    (fp32 accumulation throughout). Numerics: equal to the blocking
+    ``gnn_layer_apply`` within fp tolerance (partial sums reassociate the
+    edge reduction); bit-stable across serial/pipelined delivery.
+
+    GAT note: the overlapped schedule exchanges *transformed* rows
+    (``wh = h @ w``, computed on the owner — parameters are replicated)
+    plus an eager exchange of the (N, H) a_src scores, so attention
+    weights for all edges are available before any feature chunk lands and
+    every chunk's remote partial depends only on its own recv block.
+    """
+    wire = spec.wire_dtype
+    send_idx = lp["send_idx"]
+    lp_v = {k: v for k, v in lp.items() if k != "send_idx"}
+    S = send_idx.shape[-1]
+    B = comm.vmap
+
+    if spec.model in ("sage", "gcn"):
+        payload = h  # rows travel as raw features, like the blocking path
+        align = 1
+    elif spec.model == "gat":
+        w = layer_params["w"]  # (F_in, H, dh)
+        H, dh = w.shape[1], w.shape[2]
+        wh = jnp.einsum("...nf,fhd->...nhd", h, w)
+        payload = wh.reshape(*wh.shape[:-2], H * dh)
+        align = dh
+    else:
+        raise ValueError(spec.model)
+    F = payload.shape[-1]
+    slices = chunk_slices(F, spec.shuffle_chunks, align)
+    has_remote = S > 0 and lp["redge_src"].shape[-1] > 0
+    send = comm.send_gather(payload, send_idx) if S > 0 else None
+
+    def _zeros_like_agg():
+        return jnp.zeros(payload.shape[:-2] + (num_out, F), payload.dtype)
+
+    if spec.model in ("sage", "gcn"):
+        loc = B(lambda hh, l: _half_sum(spec, hh, l, "l", num_out))(
+            payload, lp_v
+        )
+        if has_remote:
+            parts = []
+            for sl in slices:
+                recv = comm.exchange(send[..., sl], wire)
+                parts.append(
+                    B(lambda rv, l: _half_sum(spec, rv, l, "r", num_out))(
+                        recv, lp_v
+                    )
+                )
+            rem = jnp.concatenate(parts, axis=-1)
+        else:
+            rem = _zeros_like_agg()
+
+        def _finish(lo, re, l, hh):
+            count = (l["seg_offsets"][1:] - l["seg_offsets"][:-1]).astype(
+                lo.dtype
+            )
+            agg = (lo + re) / jnp.maximum(count, 1.0)[:, None]
+            if spec.model == "sage":
+                return (
+                    hh[l["self_pos"]] @ layer_params["w_self"]
+                    + agg @ layer_params["w_neigh"]
+                    + layer_params["b"]
+                )
+            return agg @ layer_params["w"] + layer_params["b"]
+
+        out = B(_finish)(loc, rem, lp_v, h)
+    else:  # gat
+        s_src_loc = jnp.einsum("...nhd,hd->...nh", wh, layer_params["a_src"])
+        if S > 0:
+            # eager score exchange: H columns per row vs H*dh for features —
+            # the small price that lets every feature chunk aggregate
+            # independently (alpha is feature-independent)
+            s_recv = comm.exchange(
+                comm.send_gather(s_src_loc, send_idx), wire
+            )
+            s_src_mix = jnp.concatenate([s_src_loc, s_recv], axis=-2)
+        else:
+            s_src_mix = s_src_loc
+
+        def _alpha(ssrc, whd, l):
+            s_dst_n = jnp.einsum(
+                "nhd,hd->nh", whd[l["self_pos"]], layer_params["a_dst"]
+            )
+            logits = jax.nn.leaky_relu(
+                ssrc[l["edge_src"]] + s_dst_n[l["edge_dst"]],
+                negative_slope=0.2,
+            )
+            return segment_ops.edge_softmax(
+                logits, l["edge_dst"], l["edge_mask"], num_out
+            )
+
+        alpha = B(_alpha)(s_src_mix, wh, lp_v)  # (..., E, H)
+
+        def _loc_w(pl, a, l):
+            return _half_weighted(
+                spec, pl, a[l["ledge_ids"]], l, "l", num_out, dh
+            )
+
+        loc = B(_loc_w)(payload, alpha, lp_v)
+        if has_remote:
+            parts = []
+            for sl in slices:
+                recv = comm.exchange(send[..., sl], wire)
+                hs = slice(sl.start // dh, sl.stop // dh)
+
+                def _rem_w(rv, a, l, hs=hs):
+                    return _half_weighted(
+                        spec, rv, a[l["redge_ids"]][:, hs], l, "r", num_out,
+                        dh,
+                    )
+
+                parts.append(B(_rem_w)(recv, alpha, lp_v))
+            rem = jnp.concatenate(parts, axis=-1)
+        else:
+            rem = _zeros_like_agg()
+        out = loc + rem + layer_params["b"]
+    if not is_last:
+        out = jax.nn.relu(out)
+    return out
+
+
 def gnn_forward(
     spec: GNNSpec,
     params: list[dict],
     h_input: jnp.ndarray,  # (P, N_L, F_in) loaded input features per device
     plan_arrays: dict,  # device pytree from repro.train.plan_io.plan_to_device
-    shuffle_fn,  # callable(h, send_idx) -> mixed, e.g. core.shuffle.sim_shuffle
+    shuffle_fn,  # callable(h, send_idx, wire_dtype) -> mixed, e.g.
+    #   core.shuffle.sim_shuffle (wire_dtype is always passed — a custom
+    #   shuffle_fn must accept it, even if only to ignore it)
 ) -> jnp.ndarray:
     """Split-parallel forward pass (Algorithm 2): shuffle -> gnn_layer, per depth.
 
     Runs depths L-1 .. 0; returns (P, N_0, out_dim) target logits.
     ``plan_arrays['layers']`` is ordered by dst depth (0 = targets), so we
-    iterate it reversed.
+    iterate it reversed. With ``spec.overlap`` each layer runs the split
+    local/remote schedule (``_gnn_layer_overlap``) instead of the blocking
+    shuffle -> aggregate; ``spec.wire_dtype`` applies on either path.
     """
     h = h_input
     L = spec.num_layers
     for li in range(L - 1, -1, -1):
         lp = plan_arrays["layers"][li]
-        mixed = shuffle_fn(h, lp["send_idx"])  # (P, M, F)
         num_out = lp["self_pos"].shape[-1]  # static: N_i
         layer_params = params[L - 1 - li]  # params[0] consumes input features
+        if spec.overlap:
+            h = _gnn_layer_overlap(
+                spec, layer_params, h, lp, num_out, li == 0, SimComm()
+            )
+            continue
+        mixed = shuffle_fn(h, lp["send_idx"], spec.wire_dtype)  # (P, M, F)
         lp_dev = {k: v for k, v in lp.items() if k != "send_idx"}
         apply_one = lambda m, l: gnn_layer_apply(  # noqa: E731
             spec, layer_params, m, l, num_out, is_last=(li == 0)
@@ -223,7 +438,10 @@ def gnn_forward_cached(
     """
     from repro.core.shuffle import sim_serve_features
 
-    h_input = sim_serve_features(cache_block, plan_arrays["cache"], miss_feats)
+    h_input = sim_serve_features(
+        cache_block, plan_arrays["cache"], miss_feats,
+        wire_dtype=spec.wire_dtype,
+    )
     return gnn_forward(spec, params, h_input, plan_arrays, shuffle_fn)
 
 
@@ -245,14 +463,21 @@ def gnn_forward_spmd(
 
     if cache_local is not None:
         h_input = spmd_serve_features(
-            cache_local, plan_arrays["cache"], h_input, axis_name
+            cache_local, plan_arrays["cache"], h_input, axis_name,
+            wire_dtype=spec.wire_dtype,
         )
     h = h_input
     L = spec.num_layers
     for li in range(L - 1, -1, -1):
         lp = plan_arrays["layers"][li]
-        mixed = spmd_shuffle(h, lp["send_idx"], axis_name)
         num_out = lp["self_pos"].shape[-1]
+        if spec.overlap:
+            h = _gnn_layer_overlap(
+                spec, params[L - 1 - li], h, lp, num_out, li == 0,
+                SpmdComm(axis_name),
+            )
+            continue
+        mixed = spmd_shuffle(h, lp["send_idx"], axis_name, spec.wire_dtype)
         h = gnn_layer_apply(
             spec,
             params[L - 1 - li],

@@ -97,6 +97,7 @@ class PlanProducer:
         cache: FeatureCache | None = None,
         serve_cache: bool = True,
         device_sampler=None,  # repro.sampler.DeviceSampler | None
+        with_halves: bool = False,  # build the §3a local/remote edge halves
     ):
         if mode not in ("split", "dp", "pushpull"):
             raise ValueError(f"unknown mode {mode!r}")
@@ -114,6 +115,7 @@ class PlanProducer:
         self.cache = cache
         self.serve_cache = serve_cache
         self.device_sampler = device_sampler
+        self.with_halves = with_halves
 
     def build(self, epoch: int, index: int, targets: np.ndarray) -> PlanBatch:
         from repro.train.plan_io import load_labels, stage_host_features
@@ -124,7 +126,10 @@ class PlanProducer:
                 targets, self.num_devices, epoch, index
             )
             t1 = time.perf_counter()
-            plan = build_dp_plan(samples, pad_multiple=self.pad_multiple)
+            plan = build_dp_plan(
+                samples, pad_multiple=self.pad_multiple,
+                with_halves=self.with_halves,
+            )
         else:
             # device mode: the cooperative engine samples on-accelerator and
             # falls back to the host sampler's keyed API on cap overflow —
@@ -139,6 +144,7 @@ class PlanProducer:
                 self.assignment,
                 self.num_devices,
                 pad_multiple=self.pad_multiple,
+                with_halves=self.with_halves,
             )
         t2 = time.perf_counter()
         cache_plan, feats, breakdown = stage_host_features(
@@ -174,7 +180,10 @@ def finalize_cache_plan(cp: CachePlan, hwm: dict, n_l: int) -> CachePlan:
 
 
 def _finalize(
-    batch: PlanBatch, hwm: dict, sig_cache: SignatureCache | None
+    batch: PlanBatch,
+    hwm: dict,
+    sig_cache: SignatureCache | None,
+    sig_extra: tuple = (),
 ) -> PlanBatch:
     """Order-sensitive delivery step: repad to high-water marks, pad the
     staged feature/label blocks to match, and record the jit signature.
@@ -196,7 +205,7 @@ def _finalize(
         )
     batch.labels = pad_axis(batch.labels, 1, batch.plan.front_ids[0].shape[1])
     batch.t_split += time.perf_counter() - t0
-    batch.signature = plan_signature(batch.plan, batch.cache_plan)
+    batch.signature = plan_signature(batch.plan, batch.cache_plan, sig_extra)
     if sig_cache is not None:
         batch.sig_hit = sig_cache.record(batch.signature)
     return batch
@@ -231,6 +240,9 @@ class SerialPlanSource(PlanSource):
     batches: list
     hwm: dict
     sig_cache: SignatureCache | None = None
+    # static program-structure key (wire_dtype, chunks, overlap) folded into
+    # every delivered signature — see ``plan_signature``
+    sig_extra: tuple = ()
 
     def __iter__(self) -> Iterator[PlanBatch]:
         for idx, targets in enumerate(self.batches):
@@ -238,6 +250,7 @@ class SerialPlanSource(PlanSource):
                 self.producer.build(self.epoch, idx, targets),
                 self.hwm,
                 self.sig_cache,
+                self.sig_extra,
             )
 
     def stats(self) -> dict:
@@ -253,6 +266,7 @@ class PipelinedPlanSource(PlanSource):
     batches: list
     hwm: dict
     sig_cache: SignatureCache | None = None
+    sig_extra: tuple = ()
     depth: int = 4
     workers: int = 2
     _prefetcher: OrderedPrefetcher | None = field(
@@ -270,7 +284,7 @@ class PipelinedPlanSource(PlanSource):
         )
         try:
             for batch in self._prefetcher:
-                yield _finalize(batch, self.hwm, self.sig_cache)
+                yield _finalize(batch, self.hwm, self.sig_cache, self.sig_extra)
         finally:
             self.close()
 
@@ -337,18 +351,23 @@ def make_plan_source(
     sig_cache: SignatureCache | None = None,
     depth: int = 4,
     workers: int = 2,
+    sig_extra: tuple = (),
 ) -> PlanSource:
     if kind == "serial":
-        return SerialPlanSource(producer, epoch, batches, hwm, sig_cache)
+        return SerialPlanSource(
+            producer, epoch, batches, hwm, sig_cache, sig_extra
+        )
     if kind == "pipelined":
         return PipelinedPlanSource(
-            producer, epoch, batches, hwm, sig_cache, depth, workers
+            producer, epoch, batches, hwm, sig_cache, sig_extra, depth, workers
         )
     if kind == "device":
-        return DevicePlanSource(producer, epoch, batches, hwm, sig_cache)
+        return DevicePlanSource(
+            producer, epoch, batches, hwm, sig_cache, sig_extra
+        )
     if kind == "device_pipelined":
         return DevicePipelinedPlanSource(
-            producer, epoch, batches, hwm, sig_cache, depth, workers
+            producer, epoch, batches, hwm, sig_cache, sig_extra, depth, workers
         )
     raise ValueError(
         f"unknown plan source {kind!r} "

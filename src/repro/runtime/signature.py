@@ -14,21 +14,38 @@ from __future__ import annotations
 from repro.core.splitting import SplitPlan
 
 
-def plan_signature(plan: SplitPlan, cache_plan=None) -> tuple:
+def plan_signature(plan: SplitPlan, cache_plan=None, extra: tuple = ()) -> tuple:
     """The padded-shape key of a plan: exactly the dims the jit traces over.
 
     The cache plan's widths (miss block M, cache-shuffle Sc) are part of the
-    key when serving — the cached step traces over them too.
+    key when serving — the cached step traces over them too. ``extra``
+    carries static *program-structure* knobs that retrace without changing
+    any array shape — the overlap schedule's (wire_dtype, shuffle_chunks,
+    overlap) triple — so the cache's hit rate keeps meaning "the step
+    reused a compiled executable".
     """
     fronts = tuple(ids.shape for ids in plan.front_ids)
     # pack_perm covers the fused-kernel layout dims (DB, EB) — EB has its own
-    # high-water mark, so it must key the cache like every other traced dim
+    # high-water mark, so it must key the cache like every other traced dim;
+    # the local/remote halves add their traced widths (EL/ER, LEB/REB) only
+    # when the plan carries them — a blocking-path plan never ships them, so
+    # keying on them would report misses for executables jit actually reuses
     layers = tuple(
         (
             lp.edge_src.shape,
             lp.send_idx.shape,
             lp.self_pos.shape,
             lp.pack_perm.shape,
+        )
+        + (
+            (
+                lp.ledge_src.shape,
+                lp.lpack_perm.shape,
+                lp.redge_src.shape,
+                lp.rpack_perm.shape,
+            )
+            if lp.has_halves
+            else ()
         )
         for lp in plan.layers
     )
@@ -39,7 +56,7 @@ def plan_signature(plan: SplitPlan, cache_plan=None) -> tuple:
             cache_plan.send_slot.shape,
             cache_plan.miss_ids.shape,
         )
-    return (plan.num_devices, plan.num_layers, fronts, layers, cache)
+    return (plan.num_devices, plan.num_layers, fronts, layers, cache, extra)
 
 
 class SignatureCache:

@@ -150,6 +150,10 @@ def _sample_device(
         send, scnt, ofx = jax.vmap(
             lambda v, m: bucket_by_owner(v, m, dev["owner"], P, X, V)
         )(uniq, uvalid & ~mine)
+        # the frontier exchange rides the same wire choke point as the layer
+        # shuffles / cache fetch (core.shuffle); its payload is integer
+        # vertex ids, which ``wire_cast``'s int guard exempts from any
+        # configured down-cast — ids must never be quantized
         recv = sim_alltoall(send)  # (P, P, X): recv[q, p] = p's block for q
         rcnt = scnt.T
         rvalid = jnp.arange(X)[None, None, :] < rcnt[:, :, None]
@@ -233,7 +237,7 @@ def sample_minibatch_spmd(
         send, scnt, ofx = bucket_by_owner(
             uniq, uvalid & ~mine, dev_local["owner"], P, X, V
         )
-        recv = spmd_alltoall(send, axis_name)  # (P, X)
+        recv = spmd_alltoall(send, axis_name)  # (P, X) — int ids, exempt
         rcnt = spmd_alltoall(scnt[:, None], axis_name).reshape(P)
         rvalid = jnp.arange(X)[None, :] < rcnt[:, None]
         merged = jnp.concatenate([uniq, recv.reshape(-1)])

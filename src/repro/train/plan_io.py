@@ -31,25 +31,56 @@ def cache_plan_to_device(cp: CachePlan) -> dict:
     }
 
 
-def plan_to_device(plan: SplitPlan, cache_plan: CachePlan | None = None) -> dict:
-    """Convert a SplitPlan into a jit-able pytree (indices as int32)."""
+def plan_to_device(
+    plan: SplitPlan,
+    cache_plan: CachePlan | None = None,
+    with_halves: bool = False,
+) -> dict:
+    """Convert a SplitPlan into a jit-able pytree (indices as int32).
+
+    ``with_halves`` ships the local/remote edge halves the overlap schedule
+    consumes (DESIGN.md §3a) — opt-in end to end, like the builders'
+    ``with_halves``: the blocking path neither builds the halves nor pays
+    their host->device index transfers (~4 E-sized arrays + 2 packs per
+    layer). The trainer threads its ``shuffle_overlap`` knob through both
+    points; overlap-enabled plans build the halves on the producer threads,
+    off the consumer's critical path under the pipelined source.
+    """
     layers = []
     for lp in plan.layers:
-        layers.append(
-            {
-                "edge_src": jnp.asarray(lp.edge_src, jnp.int32),
-                "edge_dst": jnp.asarray(lp.edge_dst, jnp.int32),
-                "edge_mask": jnp.asarray(lp.edge_mask),
-                "send_idx": jnp.asarray(lp.send_idx, jnp.int32),
-                "self_pos": jnp.asarray(lp.self_pos, jnp.int32),
-                # dst-sorted layout for the fused aggregation kernels
-                # (docs/KERNELS.md). ~2 extra E-sized index transfers per
-                # layer; XLA drops them when agg_backend == "jnp".
-                "pack_perm": jnp.asarray(lp.pack_perm, jnp.int32),
-                "pack_dst": jnp.asarray(lp.pack_dst, jnp.int32),
-                "seg_offsets": jnp.asarray(lp.seg_offsets, jnp.int32),
-            }
-        )
+        d = {
+            "edge_src": jnp.asarray(lp.edge_src, jnp.int32),
+            "edge_dst": jnp.asarray(lp.edge_dst, jnp.int32),
+            "edge_mask": jnp.asarray(lp.edge_mask),
+            "send_idx": jnp.asarray(lp.send_idx, jnp.int32),
+            "self_pos": jnp.asarray(lp.self_pos, jnp.int32),
+            # dst-sorted layout for the fused aggregation kernels
+            # (docs/KERNELS.md). ~2 extra E-sized index transfers per
+            # layer; XLA drops them when agg_backend == "jnp".
+            "pack_perm": jnp.asarray(lp.pack_perm, jnp.int32),
+            "pack_dst": jnp.asarray(lp.pack_dst, jnp.int32),
+            "seg_offsets": jnp.asarray(lp.seg_offsets, jnp.int32),
+        }
+        if with_halves:
+            if not lp.has_halves:
+                raise ValueError(
+                    "plan was built without edge halves "
+                    "(build_*_plan(with_halves=False)) but the overlap "
+                    "schedule needs them — builder and trainer must agree "
+                    "on the shuffle_overlap knob"
+                )
+            # local/remote edge halves for the overlap schedule (§3a)
+            for k in (
+                "ledge_src", "ledge_dst", "ledge_mask", "ledge_ids",
+                "lpack_perm", "lpack_dst",
+                "redge_src", "redge_dst", "redge_mask", "redge_ids",
+                "rpack_perm", "rpack_dst",
+            ):
+                a = getattr(lp, k)
+                d[k] = jnp.asarray(a) if a.dtype == bool else jnp.asarray(
+                    a, jnp.int32
+                )
+        layers.append(d)
     out = {
         "layers": layers,
         "target_mask": jnp.asarray(plan.node_mask[0]),
@@ -65,6 +96,7 @@ def stage_batch(
     feats: np.ndarray,
     labels: np.ndarray,
     cache_plan: CachePlan | None = None,
+    with_halves: bool = False,
 ) -> tuple:
     """Host -> device transfer of one staged batch (plan + features + labels).
 
@@ -75,7 +107,7 @@ def stage_batch(
     """
     return (
         jnp.asarray(feats),
-        plan_to_device(plan, cache_plan),
+        plan_to_device(plan, cache_plan, with_halves),
         jnp.asarray(labels, jnp.int32),
     )
 

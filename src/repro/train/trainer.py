@@ -74,7 +74,47 @@ class TrainConfig:
     plan_workers: int = 2  # producer threads (pipelined source)
     sampler_backend: str = "pallas"  # device sampling kernel: pallas | jnp
     sampler_interpret: bool = True  # pallas: interpret mode (CPU); False on TPU
+    # Overlap-aware shuffle schedule (DESIGN.md §3a). These are *execution*
+    # knobs: the trainer copies them onto the model spec at init, so the
+    # jitted step's layer shuffles and the cache remote fetch agree on one
+    # wire format (the sampler's frontier exchange rides the same all-to-all
+    # choke point but carries integer ids, which ``wire_cast`` exempts from
+    # any down-cast). fp32 wire is bit-exact; bf16/fp16 quantize only bytes
+    # on the wire (accumulation stays fp32).
+    shuffle_overlap: bool = False  # split local/remote aggregation per layer
+    shuffle_chunks: int = 1  # feature-axis tiles per layer all-to-all
+    wire_dtype: str = "float32"  # float32 | bfloat16 | float16
     seed: int = 0
+
+
+#: wire bytes per element for each supported wire dtype (DESIGN.md §3a)
+_WIRE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2}
+
+
+def modeled_wire_bytes(plan, spec: GNNSpec, wire_dtype: str) -> int:
+    """Bytes the per-layer shuffles put on the wire for one plan (modeled).
+
+    Counts only *true* cross-split rows (``LayerPlan.shuffle_rows`` — padding
+    slots are free on real all-to-allv hardware and constant overhead here).
+    Per row, the payload width depends on the schedule: the blocking path
+    ships raw activations (``d_in``); the overlapped GAT path ships the
+    transformed rows plus the eagerly exchanged a_src scores
+    (``d_out + H`` — see ``_gnn_layer_overlap``). This is the §7 channel
+    model: bytes are counted here, converted to seconds with testbed
+    bandwidths by the benchmarks.
+    """
+    size = _WIRE_BYTES[wire_dtype]
+    dims = spec.layer_dims()
+    L = spec.num_layers
+    total = 0
+    for li, lp in enumerate(plan.layers):
+        d_in, d_out = dims[L - 1 - li]
+        if spec.model == "gat" and spec.overlap:
+            per_row = d_out + spec.num_heads
+        else:
+            per_row = d_in
+        total += lp.shuffle_rows() * per_row * size
+    return total
 
 
 @dataclass
@@ -93,6 +133,7 @@ class IterStats:
     load_breakdown: LoadBreakdown | None = None
     load_imbalance: float = 1.0
     cross_edge_fraction: float = 0.0
+    wire_bytes: int = 0  # modeled shuffle bytes on the wire (see above)
 
 
 @dataclass
@@ -124,6 +165,7 @@ class EpochStats:
             "shuffle_rows",
             "padded_edge_slots",
             "busiest_edges",
+            "wire_bytes",
         ):
             agg[k] = float(np.sum([getattr(i, k) for i in self.iters]))
         agg["load_imbalance"] = float(
@@ -149,8 +191,26 @@ class Trainer:
     """End-to-end mini-batch GNN training with the chosen parallelism."""
 
     def __init__(self, dataset: GraphDataset, spec: GNNSpec, cfg: TrainConfig):
+        from dataclasses import replace
+
+        from repro.core.shuffle import WIRE_DTYPES
+
+        if cfg.wire_dtype not in WIRE_DTYPES:
+            raise ValueError(
+                f"unknown wire_dtype {cfg.wire_dtype!r} (one of {WIRE_DTYPES})"
+            )
+        if cfg.shuffle_chunks < 1:
+            raise ValueError("shuffle_chunks must be >= 1")
         self.ds = dataset
-        self.spec = spec
+        # the config's execution-schedule knobs are authoritative: the spec
+        # the caller hands in describes the model, the TrainConfig describes
+        # how this trainer runs it
+        self.spec = spec = replace(
+            spec,
+            overlap=cfg.shuffle_overlap,
+            shuffle_chunks=cfg.shuffle_chunks,
+            wire_dtype=cfg.wire_dtype,
+        )
         self.cfg = cfg
         self.sampler = NeighborSampler(
             dataset.graph,
@@ -241,6 +301,7 @@ class Trainer:
             cache=self.cache,
             serve_cache=self.cache_block is not None,
             device_sampler=self.device_sampler,
+            with_halves=cfg.shuffle_overlap,
         )
 
     # ------------------------------------------------------------------ #
@@ -289,7 +350,10 @@ class Trainer:
         if cfg.mode in ("dp", "pushpull"):
             samples = self.sampler.sample_micro(targets, cfg.num_devices)
             t1 = time.perf_counter()
-            plan = build_dp_plan(samples, pad_multiple=cfg.pad_multiple)
+            plan = build_dp_plan(
+                samples, pad_multiple=cfg.pad_multiple,
+                with_halves=cfg.shuffle_overlap,
+            )
         else:
             sample = self.sampler.sample(targets)
             t1 = time.perf_counter()
@@ -298,6 +362,7 @@ class Trainer:
                 self.partition.assignment,
                 cfg.num_devices,
                 pad_multiple=cfg.pad_multiple,
+                with_halves=cfg.shuffle_overlap,
             )
         plan = repad_plan(plan, self._pad_hwm)
         t2 = time.perf_counter()
@@ -323,7 +388,9 @@ class Trainer:
         t_load = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        plan_arrays = plan_to_device(plan, cache_plan)
+        plan_arrays = plan_to_device(
+            plan, cache_plan, with_halves=self.cfg.shuffle_overlap
+        )
         if cache_plan is not None:
             self.params, self.opt_state, loss, acc = self._cached_step_fn(
                 self.params, self.opt_state,
@@ -353,6 +420,7 @@ class Trainer:
             load_breakdown=breakdown,
             load_imbalance=plan.load_imbalance(),
             cross_edge_fraction=plan.cross_edge_fraction(),
+            wire_bytes=modeled_wire_bytes(plan, self.spec, self.cfg.wire_dtype),
         )
 
     # ------------------------------------------------------------------ #
@@ -370,13 +438,19 @@ class Trainer:
             self.sig_cache,
             depth=self.cfg.pipeline_depth,
             workers=self.cfg.plan_workers,
+            sig_extra=(
+                self.cfg.wire_dtype,
+                self.cfg.shuffle_chunks,
+                self.cfg.shuffle_overlap,
+            ),
         )
 
     def _step_batch(self, batch: PlanBatch):
         """Stage a finalized batch to device and dispatch the jitted step.
         Returns the (still-async) loss/accuracy device values."""
         feats_d, plan_arrays, labels_d = stage_batch(
-            batch.plan, batch.feats, batch.labels, batch.cache_plan
+            batch.plan, batch.feats, batch.labels, batch.cache_plan,
+            with_halves=self.cfg.shuffle_overlap,
         )
         if batch.cache_plan is not None:
             self.params, self.opt_state, loss, acc = self._cached_step_fn(
@@ -389,8 +463,7 @@ class Trainer:
             )
         return loss, acc
 
-    @staticmethod
-    def _iter_stats(batch: PlanBatch, loss, acc, t0: float) -> IterStats:
+    def _iter_stats(self, batch: PlanBatch, loss, acc, t0: float) -> IterStats:
         plan = batch.plan
         loss = float(loss)  # blocks until the step's results are ready
         return IterStats(
@@ -408,6 +481,7 @@ class Trainer:
             load_breakdown=batch.breakdown,
             load_imbalance=plan.load_imbalance(),
             cross_edge_fraction=plan.cross_edge_fraction(),
+            wire_bytes=modeled_wire_bytes(plan, self.spec, self.cfg.wire_dtype),
         )
 
     def train_epoch(self, max_iters: int | None = None) -> EpochStats:

@@ -141,9 +141,14 @@ def test_plan_signature_tracks_padded_shapes(ds):
     tr, _, _ = _trajectory(ds, "split", "serial", epochs=1, iters=2)
     src = tr.plan_source_for(99, max_iters=1)
     batch = next(iter(src))
-    sig = plan_signature(batch.plan)
+    # delivered signatures fold in the static overlap-schedule knobs
+    # (wire_dtype, chunks, overlap) — they retrace the step without
+    # changing any array shape (DESIGN.md §3a)
+    extra = (tr.cfg.wire_dtype, tr.cfg.shuffle_chunks, tr.cfg.shuffle_overlap)
+    sig = plan_signature(batch.plan, extra=extra)
     assert sig == batch.signature
-    assert sig[0] == 4 and sig[1] == 2  # (P, L, fronts, layers)
+    assert sig != plan_signature(batch.plan, extra=("bfloat16", 4, True))
+    assert sig[0] == 4 and sig[1] == 2  # (P, L, fronts, layers, cache, extra)
 
 
 def test_pipelined_producer_failure_propagates_and_cleans_up(ds):
