@@ -29,6 +29,14 @@ BENCHES = {
         "§3a — overlap/wire-format smoke gate",
         {"modes": ("split",), "dataset": "tiny", "rounds": 1, "smoke": True},
     ),
+    # reduced fig5 run with the qualitative partitioner gates (gsplit < rand
+    # cross edges, replication strictly reduces wire bytes) enforced; same
+    # checks as `python -m benchmarks.fig5_partition_quality --smoke`
+    "fig5_smoke": (
+        "benchmarks.fig5_partition_quality",
+        "Fig. 5 — partitioner quality smoke gate",
+        {"dataset": "tiny", "smoke": True},
+    ),
 }
 
 

@@ -1,6 +1,13 @@
 """Split parallelism core: presample -> partition -> online split -> shuffle."""
 from repro.core.presample import PresampleWeights, presample
-from repro.core.partition import Partition, partition_graph
+from repro.core.partition import (
+    EdgeTelemetry,
+    Partition,
+    ReplicationSet,
+    partition_graph,
+    refine_partition,
+    select_replication,
+)
 from repro.core.splitting import (
     SplitPlan,
     LayerPlan,
@@ -21,7 +28,11 @@ __all__ = [
     "PresampleWeights",
     "presample",
     "Partition",
+    "ReplicationSet",
+    "EdgeTelemetry",
     "partition_graph",
+    "refine_partition",
+    "select_replication",
     "SplitPlan",
     "LayerPlan",
     "build_split_plan",

@@ -95,6 +95,39 @@ def chunk_slices(width: int, chunks: int, align: int = 1) -> list[slice]:
     return out
 
 
+def sim_append_replicated(
+    mixed: jnp.ndarray, rep_block: jnp.ndarray
+) -> jnp.ndarray:
+    """Append the static replicated block to every device's buffer (sim).
+
+    mixed     -- (P, M, F) per-device rows (a mixed buffer or a local block)
+    rep_block -- (R, F) the device-resident replicated rows — *one* copy,
+                 broadcast across the P axis (every device holds the same
+                 block by construction; no bytes move here)
+    returns   -- (P, M + R, F)
+
+    This completes the mixed-buffer layout ``[local][recv][replicated]``:
+    plan entries ``>= n_local + P*S`` index the appended region. The rows
+    are the same fp32 bits as the loaded features, so rerouted edges read
+    bit-identical values.
+    """
+    P = mixed.shape[0]
+    rep = jnp.broadcast_to(rep_block[None], (P,) + rep_block.shape)
+    return jnp.concatenate([mixed, rep.astype(mixed.dtype)], axis=1)
+
+
+def spmd_append_replicated(
+    local: jnp.ndarray, rep_block: jnp.ndarray
+) -> jnp.ndarray:
+    """Append the replicated block to this device's buffer (shard_map body).
+
+    local (M, F) + rep_block (R, F) -> (M + R, F); the spmd mirror of
+    ``sim_append_replicated`` (the block is replicated across the mesh, so
+    inside the body it is simply this shard's full copy).
+    """
+    return jnp.concatenate([local, rep_block.astype(local.dtype)], axis=0)
+
+
 def sim_shuffle(
     h: jnp.ndarray, send_idx: jnp.ndarray, wire_dtype: str | None = None
 ) -> jnp.ndarray:
@@ -163,6 +196,11 @@ class SimComm:
         P = recv.shape[0]
         return recv.reshape(P, -1, recv.shape[-1])
 
+    def append_rows(self, rows: jnp.ndarray, extra: jnp.ndarray):
+        # broadcast-append a shared (R, Fc) block to (P, M, Fc) rows — the
+        # overlapped executor's hook for the replicated region
+        return sim_append_replicated(rows, extra)
+
 
 class SpmdComm:
     """Exchange adapter for the overlapped layer schedule inside shard_map.
@@ -184,6 +222,9 @@ class SpmdComm:
     def exchange(self, send: jnp.ndarray, wire_dtype: str | None):
         recv = spmd_alltoall(send, self.axis_name, wire_dtype)  # (P, S, Fc)
         return recv.reshape(-1, recv.shape[-1])
+
+    def append_rows(self, rows: jnp.ndarray, extra: jnp.ndarray):
+        return spmd_append_replicated(rows, extra)
 
 
 def _scatter_add_rows(

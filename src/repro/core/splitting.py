@@ -115,6 +115,14 @@ class LayerPlan:
     seg_offsets: np.ndarray  # (P, N_i + 1) int32 CSR offsets, dst-sorted order
     pack_perm: np.ndarray  # (P, DB, EB) int32 slot -> edge idx (pad: E)
     pack_dst: np.ndarray  # (P, DB, EB) int32 slot -> dst - db*R (pad: R)
+    # Rows of the static replicated feature block appended to the mixed
+    # buffer *after* the recv region: ``[local (n_local)][recv (P*S)]
+    # [replicated (R)]``. Non-zero only on the input layer of plans built
+    # with a ``ReplicationSet`` — edges whose src is replicated address
+    # ``n_local + P*S + slot`` and never enter the send lists. Static per
+    # run (the full set size, not the per-batch occupancy), so repad only
+    # ever *moves* the region, never grows it.
+    num_replicated: int = 0
     # --- local/remote edge halves (DESIGN.md §3a, overlap schedule) -------
     # The same edge set partitioned by source locality, so the overlapped
     # executor can aggregate the local half from its own row block while the
@@ -206,13 +214,23 @@ class SplitPlan:
     def cross_edge_fraction(self) -> float:
         """Cross-split edges / total edges (paper Fig. 5 metric)."""
         total = self.computed_edges()
-        # an edge is cross-split iff its src addresses the recv region; the
-        # boundary is the layer's recorded n_local (== the current front
-        # width only because repad keeps the two in sync — using the front
-        # shape directly undercounted on repadded plans)
+        # an edge is cross-split iff its src addresses the recv region
+        # ``[n_local, n_local + P*S)``; the boundary is the layer's recorded
+        # n_local (== the current front width only because repad keeps the
+        # two in sync — using the front shape directly undercounted on
+        # repadded plans). Sources *beyond* the recv region address the
+        # static replicated block: they are served locally on every split
+        # and put nothing on the wire, so they do not count as cross.
         cross = 0
         for l in self.layers:
-            cross += int(((l.edge_src >= l.n_local) & l.edge_mask).sum())
+            recv_end = l.n_local + self.num_devices * l.max_send
+            cross += int(
+                (
+                    (l.edge_src >= l.n_local)
+                    & (l.edge_src < recv_end)
+                    & l.edge_mask
+                ).sum()
+            )
         return cross / total if total else 0.0
 
 
@@ -238,20 +256,29 @@ def split_edge_halves(
     n_local: int,
     num_out: int,
     pad_multiple: int = 8,
+    recv_width: int | None = None,
 ) -> dict:
     """Partition a layer's edge set into local-src and remote-src halves.
 
-    Every valid edge lands in exactly one half (``src < n_local`` -> local,
-    else remote); the halves are compacted per device and padded to bucketed
-    widths ``EL``/``ER``. Remote sources are stored *recv-region relative*
-    (``edge_src - n_local``), making them invariant under local-region
-    growth — ``repad_plan`` only rebases them when the send width S grows.
-    Returns the ``LayerPlan`` half fields (see the dataclass) including the
-    per-half packed layouts for the fused kernels.
+    Every valid edge lands in exactly one half; the halves are compacted per
+    device and padded to bucketed widths ``EL``/``ER``. Remote sources are
+    stored *recv-region relative* (``edge_src - n_local``), making them
+    invariant under local-region growth — ``repad_plan`` only rebases them
+    when the send width S grows. Returns the ``LayerPlan`` half fields (see
+    the dataclass) including the per-half packed layouts for the fused
+    kernels.
+
+    ``recv_width`` bounds the recv region (``P * S``): sources at or beyond
+    ``n_local + recv_width`` address the static *replicated* block, which is
+    device-resident — so they belong to the **local** half (they need no
+    exchange), with their coordinates compacted onto the local half's source
+    space ``concat([local rows, replicated rows])`` (i.e. ``recv_width`` is
+    subtracted). ``None`` keeps the historical two-way split, which is
+    identical whenever no source lies beyond the recv region.
     """
     P, _ = edge_src.shape
 
-    def one_half(sel: np.ndarray, rebase: int) -> tuple:
+    def one_half(sel: np.ndarray, vals: np.ndarray) -> tuple:
         counts = sel.sum(axis=1)
         W = _roundup(int(counts.max()), pad_multiple)
         src = np.zeros((P, W), dtype=np.int32)
@@ -262,14 +289,26 @@ def split_edge_halves(
             idx = np.flatnonzero(sel[p])
             k = idx.shape[0]
             ids[p, :k] = idx
-            src[p, :k] = edge_src[p, idx] - rebase
+            src[p, :k] = vals[p, idx]
             dst[p, :k] = edge_dst[p, idx]
             mask[p, :k] = True
         pack_perm, pack_dst = packed_layout(dst, mask, num_out)
         return src, dst, mask, ids, pack_perm, pack_dst
 
-    local = one_half(edge_mask & (edge_src < n_local), 0)
-    remote = one_half(edge_mask & (edge_src >= n_local), n_local)
+    if recv_width is None:
+        local_sel = edge_mask & (edge_src < n_local)
+        local_vals = edge_src
+        remote_sel = edge_mask & (edge_src >= n_local)
+    else:
+        recv_end = n_local + recv_width
+        is_rep = edge_src >= recv_end
+        local_sel = edge_mask & ((edge_src < n_local) | is_rep)
+        # replicated srcs compact onto [n_local, n_local + R) of the local
+        # half's concat([local rows, replicated rows]) source space
+        local_vals = np.where(is_rep, edge_src - recv_width, edge_src)
+        remote_sel = edge_mask & (edge_src >= n_local) & ~is_rep
+    local = one_half(local_sel, local_vals)
+    remote = one_half(remote_sel, edge_src - n_local)
     return {
         "ledge_src": local[0],
         "ledge_dst": local[1],
@@ -292,12 +331,25 @@ def build_split_plan(
     num_devices: int,
     pad_multiple: int = 8,
     with_halves: bool = False,
+    replication=None,  # core.partition.ReplicationSet | None
 ) -> SplitPlan:
     """Split a sampled mini-batch with f_G = ``assignment`` (the online part).
 
     Everything here is O(|sample|) with vectorized numpy — the per-vertex
     mapping is a constant-time lookup, matching the paper's requirement that
     splitting runs on-the-fly at every iteration.
+
+    With a ``replication`` set, *input-layer* edges whose src is replicated
+    are local on every split: they are dropped from the send lists (the
+    all-to-all never carries their rows) and their ``edge_src`` is rerouted
+    to the replicated region of the mixed buffer,
+    ``n_local + P*S + slot_of[src]``. The rule is uniform — owner-local
+    edges with a replicated src reroute too, which is bit-identical (the
+    replicated block holds the same fp32 rows as the loaded features) and
+    keeps the plan a pure function of (sample, assignment, replication).
+    Only the input layer qualifies: deeper frontiers carry *computed*
+    hidden activations, which a remote split could only serve by redundantly
+    recomputing the vertex's whole subtree — a net traffic loss.
     """
     P = num_devices
     L = sample.num_layers
@@ -339,8 +391,20 @@ def build_split_plan(
         src_owner, src_local = pos_of(i + 1, layer.src)
         n_local = front_size[i + 1]
 
+        # replication applies to the input layer only (depth-L sources are
+        # the statically servable feature rows); R is the *full* set size —
+        # a static region width, independent of per-batch occupancy
+        bottom = i == L - 1
+        if replication is not None and bottom:
+            rep_slot = replication.slot_of[layer.src].astype(np.int64)
+            is_rep = rep_slot >= 0
+            num_rep = replication.num_replicated
+        else:
+            is_rep = np.zeros(layer.src.shape[0], dtype=bool)
+            num_rep = 0
+
         # ---- build send lists: unique (owner q, needer p, vertex) ----------
-        remote = src_owner != dst_owner
+        remote = (src_owner != dst_owner) & ~is_rep
         r_q = src_owner[remote].astype(np.int64)
         r_p = dst_owner[remote].astype(np.int64)
         r_v = layer.src[remote]
@@ -370,6 +434,9 @@ def build_split_plan(
         if remote.any():
             recv_slot = slot[inv]  # slot of each remote edge's vertex
             src_pos[remote] = n_local + r_q * S + recv_slot
+        if is_rep.any():
+            # replicated srcs address the static block after the recv region
+            src_pos[is_rep] = n_local + P * S + rep_slot[is_rep]
         E = _roundup(max(layer.num_edges, 1), pad_multiple)
         edge_src = np.zeros((P, E), dtype=np.int32)
         edge_dst = np.zeros((P, E), dtype=np.int32)
@@ -404,11 +471,13 @@ def build_split_plan(
                 send_count=send_count,
                 self_pos=self_pos,
                 n_local=n_local,
+                num_replicated=num_rep,
                 **layer_layout(edge_dst, edge_mask, front_size[i]),
                 **(
                     split_edge_halves(
                         edge_src, edge_dst, edge_mask, n_local,
                         front_size[i], pad_multiple,
+                        recv_width=P * S,
                     )
                     if with_halves
                     else {}
@@ -561,19 +630,30 @@ def repad_plan(plan: SplitPlan, hwm: dict) -> SplitPlan:
         hwm[sk] = max(hwm.get(sk, 0), old_s)
         new_s = hwm[sk]
         # Remote edge_src entries encode ``n_local + q*S + slot`` against the
-        # pre-repad layout. Growing the local region (N_{i+1}) or the send
-        # width (S) moves the recv region, so rebase them onto the new layout
-        # — otherwise they address zeroed padding rows and split-mode
-        # aggregation silently drops every cross-split edge.
+        # pre-repad layout; replicated entries encode
+        # ``n_local + P*S + rep_slot`` just past it. Growing the local
+        # region (N_{i+1}) or the send width (S) moves both regions, so
+        # rebase each onto the new layout — otherwise they address zeroed
+        # padding rows and split-mode aggregation silently drops every
+        # cross-split (or replicated) edge. The replicated region's width R
+        # is static, so its entries only *shift* by the region's new start.
         old_n = lp.n_local
         new_n = plan.front_ids[i + 1].shape[1]  # already padded to hwm[N{i+1}]
-        if old_s > 0 and (new_n != old_n or new_s != old_s):
-            remote = lp.edge_src >= old_n
-            if remote.any():
+        num_dev = lp.edge_src.shape[0]
+        if (old_s > 0 or lp.num_replicated > 0) and (
+            new_n != old_n or new_s != old_s
+        ):
+            old_recv_end = old_n + num_dev * old_s
+            rep = lp.edge_src >= old_recv_end  # empty when num_replicated=0
+            remote = (lp.edge_src >= old_n) & ~rep
+            if old_s > 0 and remote.any():
                 q, slot = np.divmod(
                     lp.edge_src[remote].astype(np.int64) - old_n, old_s
                 )
                 lp.edge_src[remote] = (new_n + q * new_s + slot).astype(np.int32)
+            if rep.any():
+                shift = (new_n + num_dev * new_s) - old_recv_end
+                lp.edge_src[rep] += np.int32(shift)
         lp.n_local = new_n
         lp.send_idx = pad_axis(lp.send_idx, 2, new_s)
         nk = f"N{i}"
@@ -610,6 +690,14 @@ def repad_plan(plan: SplitPlan, hwm: dict) -> SplitPlan:
             if side == "r" and old_s > 0 and new_s != old_s:
                 q, slot = np.divmod(lp.redge_src.astype(np.int64), old_s)
                 lp.redge_src = (q * new_s + slot).astype(np.int32)
+            if side == "l" and lp.num_replicated > 0 and new_n != old_n:
+                # local-half sources live in concat([local rows, replicated
+                # rows]): entries >= old n_local are replicated-block rows
+                # and shift with the local region's growth (masked padding
+                # slots are zeros, hence < old_n, hence untouched)
+                lrep = lp.ledge_src >= old_n
+                if lrep.any():
+                    lp.ledge_src[lrep] += np.int32(new_n - old_n)
             for name in ("edge_src", "edge_dst", "edge_mask", "edge_ids"):
                 attr = f"{side}{name}"
                 setattr(lp, attr, pad_axis(getattr(lp, attr), 1, hwm[hk]))

@@ -163,6 +163,21 @@ def split_cache_specs(cache_arrays) -> dict:
     )
 
 
+def replicated_block_specs(rep_arrays) -> dict:
+    """Hot-vertex replication block: fully replicated on every device.
+
+    The (R, F) resident block of replicated feature rows (and any companion
+    arrays, e.g. the slot map) is the same on every split by construction —
+    that is the whole point: replicated-src edges aggregate locally with
+    zero wire bytes. Under SPMD the block therefore carries an all-``None``
+    PartitionSpec, mirroring the ``owner``/``local_row`` maps in
+    ``sampler_shard_specs``.
+    """
+    return jax.tree_util.tree_map(
+        lambda leaf: P(*((None,) * leaf.ndim)), rep_arrays
+    )
+
+
 def sampler_shard_specs(dev_arrays: dict) -> dict:
     """Device CSR shard sharding for SPMD cooperative sampling.
 

@@ -16,7 +16,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.shuffle import SimComm, SpmdComm, chunk_slices
+from repro.core.shuffle import (
+    SimComm,
+    SpmdComm,
+    chunk_slices,
+    sim_append_replicated,
+    spmd_append_replicated,
+)
 from repro.kernels import segment_ops
 from repro.kernels.gather_segsum import ops as gather_ops
 
@@ -254,6 +260,7 @@ def _gnn_layer_overlap(
     num_out: int,
     is_last: bool,
     comm,  # core.shuffle.SimComm | SpmdComm
+    rep_block: jnp.ndarray | None = None,  # (R, F) replicated input rows
 ) -> jnp.ndarray:
     """One GNN layer under the overlap schedule (DESIGN.md §3a).
 
@@ -271,6 +278,14 @@ def _gnn_layer_overlap(
     plus an eager exchange of the (N, H) a_src scores, so attention
     weights for all edges are available before any feature chunk lands and
     every chunk's remote partial depends only on its own recv block.
+
+    ``rep_block`` (input layer only) carries the statically replicated
+    feature rows: the plan's local half addresses the source space
+    ``concat([local rows, replicated rows])``, so the block is appended to
+    the local half's rows (``comm.append_rows`` — a broadcast, no wire
+    traffic) and replicated-src edges aggregate in the local partial while
+    the (now smaller) remote exchange flies. For GAT the block is
+    transformed and scored on device exactly like local rows.
     """
     wire = spec.wire_dtype
     send_idx = lp["send_idx"]
@@ -280,12 +295,18 @@ def _gnn_layer_overlap(
 
     if spec.model in ("sage", "gcn"):
         payload = h  # rows travel as raw features, like the blocking path
+        pay_rep = rep_block  # raw features for replicated rows too
         align = 1
     elif spec.model == "gat":
         w = layer_params["w"]  # (F_in, H, dh)
         H, dh = w.shape[1], w.shape[2]
         wh = jnp.einsum("...nf,fhd->...nhd", h, w)
         payload = wh.reshape(*wh.shape[:-2], H * dh)
+        if rep_block is not None:
+            wh_rep = jnp.einsum("rf,fhd->rhd", rep_block, w)  # (R, H, dh)
+            pay_rep = wh_rep.reshape(wh_rep.shape[0], H * dh)
+        else:
+            pay_rep = None
         align = dh
     else:
         raise ValueError(spec.model)
@@ -293,13 +314,16 @@ def _gnn_layer_overlap(
     slices = chunk_slices(F, spec.shuffle_chunks, align)
     has_remote = S > 0 and lp["redge_src"].shape[-1] > 0
     send = comm.send_gather(payload, send_idx) if S > 0 else None
+    loc_rows = (
+        comm.append_rows(payload, pay_rep) if pay_rep is not None else payload
+    )
 
     def _zeros_like_agg():
         return jnp.zeros(payload.shape[:-2] + (num_out, F), payload.dtype)
 
     if spec.model in ("sage", "gcn"):
         loc = B(lambda hh, l: _half_sum(spec, hh, l, "l", num_out))(
-            payload, lp_v
+            loc_rows, lp_v
         )
         if has_remote:
             parts = []
@@ -340,6 +364,11 @@ def _gnn_layer_overlap(
             s_src_mix = jnp.concatenate([s_src_loc, s_recv], axis=-2)
         else:
             s_src_mix = s_src_loc
+        if pay_rep is not None:
+            # replicated rows sit past the recv region in the mixed source
+            # space; their a_src scores are computed on device like local rows
+            s_rep = jnp.einsum("rhd,hd->rh", wh_rep, layer_params["a_src"])
+            s_src_mix = comm.append_rows(s_src_mix, s_rep)
 
         def _alpha(ssrc, whd, l):
             s_dst_n = jnp.einsum(
@@ -360,7 +389,7 @@ def _gnn_layer_overlap(
                 spec, pl, a[l["ledge_ids"]], l, "l", num_out, dh
             )
 
-        loc = B(_loc_w)(payload, alpha, lp_v)
+        loc = B(_loc_w)(loc_rows, alpha, lp_v)
         if has_remote:
             parts = []
             for sl in slices:
@@ -391,6 +420,7 @@ def gnn_forward(
     shuffle_fn,  # callable(h, send_idx, wire_dtype) -> mixed, e.g.
     #   core.shuffle.sim_shuffle (wire_dtype is always passed — a custom
     #   shuffle_fn must accept it, even if only to ignore it)
+    rep_block: jnp.ndarray | None = None,  # (R, F_in) replicated input rows
 ) -> jnp.ndarray:
     """Split-parallel forward pass (Algorithm 2): shuffle -> gnn_layer, per depth.
 
@@ -399,6 +429,12 @@ def gnn_forward(
     iterate it reversed. With ``spec.overlap`` each layer runs the split
     local/remote schedule (``_gnn_layer_overlap``) instead of the blocking
     shuffle -> aggregate; ``spec.wire_dtype`` applies on either path.
+
+    ``rep_block`` holds the statically replicated hot-vertex feature rows
+    (DESIGN.md "Partitioning & replication"). It only applies to the input
+    layer (li == L-1): plans built with a replication set address those
+    sources past the recv region, so the block is appended to the mixed
+    buffer after the (smaller) shuffle. Interior layers never see it.
     """
     h = h_input
     L = spec.num_layers
@@ -406,12 +442,16 @@ def gnn_forward(
         lp = plan_arrays["layers"][li]
         num_out = lp["self_pos"].shape[-1]  # static: N_i
         layer_params = params[L - 1 - li]  # params[0] consumes input features
+        rep = rep_block if li == L - 1 else None
         if spec.overlap:
             h = _gnn_layer_overlap(
-                spec, layer_params, h, lp, num_out, li == 0, SimComm()
+                spec, layer_params, h, lp, num_out, li == 0, SimComm(),
+                rep_block=rep,
             )
             continue
         mixed = shuffle_fn(h, lp["send_idx"], spec.wire_dtype)  # (P, M, F)
+        if rep is not None:
+            mixed = sim_append_replicated(mixed, rep)
         lp_dev = {k: v for k, v in lp.items() if k != "send_idx"}
         apply_one = lambda m, l: gnn_layer_apply(  # noqa: E731
             spec, layer_params, m, l, num_out, is_last=(li == 0)
@@ -427,6 +467,7 @@ def gnn_forward_cached(
     miss_feats: jnp.ndarray,  # (P, M, F) host-gathered cache-miss rows
     plan_arrays: dict,  # plan pytree incl. the "cache" serving recipe
     shuffle_fn,
+    rep_block: jnp.ndarray | None = None,  # (R, F_in) replicated input rows
 ) -> jnp.ndarray:
     """Split-parallel forward with the loading stage folded into the step.
 
@@ -442,7 +483,9 @@ def gnn_forward_cached(
         cache_block, plan_arrays["cache"], miss_feats,
         wire_dtype=spec.wire_dtype,
     )
-    return gnn_forward(spec, params, h_input, plan_arrays, shuffle_fn)
+    return gnn_forward(
+        spec, params, h_input, plan_arrays, shuffle_fn, rep_block=rep_block
+    )
 
 
 def gnn_forward_spmd(
@@ -452,12 +495,16 @@ def gnn_forward_spmd(
     plan_arrays: dict,  # per-device slices (leading P axis removed)
     axis_name: str,
     cache_local: jnp.ndarray | None = None,  # (C, F) resident cache shard
+    rep_block: jnp.ndarray | None = None,  # (R, F_in) replicated input rows
 ) -> jnp.ndarray:
     """Per-device forward for `shard_map` execution (same math as sim mode).
 
     When ``cache_local`` is given, ``h_input`` is the (M, F) miss block and
     the input rows are served from the sharded resident cache first
     (``spmd_serve_features`` — the mirror of ``gnn_forward_cached``).
+    ``rep_block`` is the fully replicated hot-vertex block (identical on
+    every device); it is appended after the input-layer shuffle exactly as
+    in ``gnn_forward``.
     """
     from repro.core.shuffle import spmd_serve_features, spmd_shuffle
 
@@ -471,13 +518,16 @@ def gnn_forward_spmd(
     for li in range(L - 1, -1, -1):
         lp = plan_arrays["layers"][li]
         num_out = lp["self_pos"].shape[-1]
+        rep = rep_block if li == L - 1 else None
         if spec.overlap:
             h = _gnn_layer_overlap(
                 spec, params[L - 1 - li], h, lp, num_out, li == 0,
-                SpmdComm(axis_name),
+                SpmdComm(axis_name), rep_block=rep,
             )
             continue
         mixed = spmd_shuffle(h, lp["send_idx"], axis_name, spec.wire_dtype)
+        if rep is not None:
+            mixed = spmd_append_replicated(mixed, rep)
         h = gnn_layer_apply(
             spec,
             params[L - 1 - li],

@@ -98,6 +98,8 @@ class PlanProducer:
         serve_cache: bool = True,
         device_sampler=None,  # repro.sampler.DeviceSampler | None
         with_halves: bool = False,  # build the §3a local/remote edge halves
+        replication=None,  # core.partition.ReplicationSet | None
+        telemetry=None,  # core.partition.EdgeTelemetry | None
     ):
         if mode not in ("split", "dp", "pushpull"):
             raise ValueError(f"unknown mode {mode!r}")
@@ -116,6 +118,12 @@ class PlanProducer:
         self.serve_cache = serve_cache
         self.device_sampler = device_sampler
         self.with_halves = with_halves
+        if replication is not None and mode != "split":
+            raise ValueError("hot-vertex replication is split-mode only")
+        # mutable on purpose: Trainer.refine_partition swaps both between
+        # epochs; EdgeTelemetry.record is thread-safe for pipelined producers
+        self.replication = replication
+        self.telemetry = telemetry
 
     def build(self, epoch: int, index: int, targets: np.ndarray) -> PlanBatch:
         from repro.train.plan_io import load_labels, stage_host_features
@@ -139,12 +147,15 @@ class PlanProducer:
             else:
                 sample = self.sampler.sample_batch(targets, epoch, index)
             t1 = time.perf_counter()
+            if self.telemetry is not None:
+                self.telemetry.record(sample)
             plan = build_split_plan(
                 sample,
                 self.assignment,
                 self.num_devices,
                 pad_multiple=self.pad_multiple,
                 with_halves=self.with_halves,
+                replication=self.replication,
             )
         t2 = time.perf_counter()
         cache_plan, feats, breakdown = stage_host_features(

@@ -36,6 +36,10 @@ def plan_signature(plan: SplitPlan, cache_plan=None, extra: tuple = ()) -> tuple
             lp.send_idx.shape,
             lp.self_pos.shape,
             lp.pack_perm.shape,
+            # replicated-block height R: static per run, but it shifts the
+            # mixed-buffer region boundaries the gather indices point into,
+            # so two plans that differ only in R must never share a key
+            lp.num_replicated,
         )
         + (
             (

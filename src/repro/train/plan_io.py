@@ -35,6 +35,7 @@ def plan_to_device(
     plan: SplitPlan,
     cache_plan: CachePlan | None = None,
     with_halves: bool = False,
+    num_replicated: int = 0,
 ) -> dict:
     """Convert a SplitPlan into a jit-able pytree (indices as int32).
 
@@ -45,7 +46,22 @@ def plan_to_device(
     layer). The trainer threads its ``shuffle_overlap`` knob through both
     points; overlap-enabled plans build the halves on the producer threads,
     off the consumer's critical path under the pipelined source.
+
+    ``num_replicated`` is the trainer's resident hot-vertex block height R
+    (0 when replication is off). Plans built with a replication set address
+    sources past the recv region under the assumption that exactly R
+    replicated rows get appended to the mixed buffer — a mismatch between
+    the plan and the block the step will serve is a silent wrong-gather, so
+    it is rejected here, at staging time.
     """
+    rep = plan.layers[-1].num_replicated if plan.layers else 0
+    if rep != num_replicated:
+        raise ValueError(
+            f"plan carries {rep} replicated source rows but the trainer "
+            f"serves a block of {num_replicated} — the plan builder and the "
+            "resident replication block must come from the same "
+            "ReplicationSet"
+        )
     layers = []
     for lp in plan.layers:
         d = {
@@ -97,6 +113,7 @@ def stage_batch(
     labels: np.ndarray,
     cache_plan: CachePlan | None = None,
     with_halves: bool = False,
+    num_replicated: int = 0,
 ) -> tuple:
     """Host -> device transfer of one staged batch (plan + features + labels).
 
@@ -107,7 +124,7 @@ def stage_batch(
     """
     return (
         jnp.asarray(feats),
-        plan_to_device(plan, cache_plan, with_halves),
+        plan_to_device(plan, cache_plan, with_halves, num_replicated),
         jnp.asarray(labels, jnp.int32),
     )
 

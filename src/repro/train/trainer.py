@@ -84,6 +84,17 @@ class TrainConfig:
     shuffle_overlap: bool = False  # split local/remote aggregation per layer
     shuffle_chunks: int = 1  # feature-axis tiles per layer all-to-all
     wire_dtype: str = "float32"  # float32 | bfloat16 | float16
+    # Hot-vertex replication (DESIGN.md "Partitioning & replication"): a
+    # fraction of feature memory spent on a device-resident block of the
+    # hottest cross-part source vertices, replicated on every split. Edges
+    # sourced at a replicated vertex are answered from the resident block
+    # and never enter the all-to-all. Split mode only; 0.0 = off. dp /
+    # pushpull plans are bit-identical regardless of this knob.
+    replication_budget: float = 0.0  # fraction of |V| rows replicated
+    # Record per-batch frontier/edge telemetry (core.partition.EdgeTelemetry)
+    # from actual training batches; feed it back between epochs via
+    # ``Trainer.refine_partition()`` (method="telemetry").
+    record_telemetry: bool = False
     seed: int = 0
 
 
@@ -244,8 +255,27 @@ class Trainer:
                 weights=self.weights,
                 train_ids=dataset.train_ids,
                 seed=cfg.seed,
+                replication_budget=cfg.replication_budget,
             )
         self.t_partition = time.perf_counter() - t0
+
+        # hot-vertex replication: the selected rows become a device-resident
+        # (R, F) block appended past the recv region of the mixed buffer
+        self.replication = self.partition.replication if self.partition else None
+        self.rep_block = None
+        if self.replication is not None:
+            self.rep_block = jnp.asarray(
+                dataset.features[self.replication.vertices].astype(
+                    np.float32, copy=False
+                )
+            )
+        self.telemetry = None
+        if cfg.record_telemetry and cfg.mode == "split":
+            from repro.core.partition import EdgeTelemetry
+
+            self.telemetry = EdgeTelemetry(
+                dataset.graph.num_nodes, dataset.graph.num_edges
+            )
 
         self.cache = None
         self.cache_block = None  # (P, C, F) device-resident rows when serving
@@ -302,6 +332,8 @@ class Trainer:
             serve_cache=self.cache_block is not None,
             device_sampler=self.device_sampler,
             with_halves=cfg.shuffle_overlap,
+            replication=self.replication,
+            telemetry=self.telemetry,
         )
 
     # ------------------------------------------------------------------ #
@@ -331,17 +363,29 @@ class Trainer:
 
             return step
 
+        # the replicated block rides in the plan pytree under "rep" (absent
+        # when replication is off — dict structure keys the jit trace), so
+        # Trainer.refine_partition can swap the block without stale closures
         step = make_step(
             lambda params, feats, pa: gnn_forward(
-                spec, params, feats, pa, sim_shuffle
+                spec, params, feats, pa, sim_shuffle, rep_block=pa.get("rep")
             )
         )
         cached_step = make_step(
             lambda params, inputs, pa: gnn_forward_cached(
-                spec, params, inputs[0], inputs[1], pa, sim_shuffle
+                spec, params, inputs[0], inputs[1], pa, sim_shuffle,
+                rep_block=pa.get("rep"),
             )
         )
         return step, cached_step
+
+    def _num_replicated(self) -> int:
+        return self.replication.num_replicated if self.replication else 0
+
+    def _attach_rep(self, plan_arrays: dict) -> dict:
+        if self.rep_block is not None:
+            plan_arrays["rep"] = self.rep_block
+        return plan_arrays
 
     # ------------------------------------------------------------------ #
     def _plan_for(self, targets: np.ndarray):
@@ -363,6 +407,7 @@ class Trainer:
                 cfg.num_devices,
                 pad_multiple=cfg.pad_multiple,
                 with_halves=cfg.shuffle_overlap,
+                replication=self.replication,
             )
         plan = repad_plan(plan, self._pad_hwm)
         t2 = time.perf_counter()
@@ -388,8 +433,11 @@ class Trainer:
         t_load = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        plan_arrays = plan_to_device(
-            plan, cache_plan, with_halves=self.cfg.shuffle_overlap
+        plan_arrays = self._attach_rep(
+            plan_to_device(
+                plan, cache_plan, with_halves=self.cfg.shuffle_overlap,
+                num_replicated=self._num_replicated(),
+            )
         )
         if cache_plan is not None:
             self.params, self.opt_state, loss, acc = self._cached_step_fn(
@@ -451,7 +499,9 @@ class Trainer:
         feats_d, plan_arrays, labels_d = stage_batch(
             batch.plan, batch.feats, batch.labels, batch.cache_plan,
             with_halves=self.cfg.shuffle_overlap,
+            num_replicated=self._num_replicated(),
         )
+        plan_arrays = self._attach_rep(plan_arrays)
         if batch.cache_plan is not None:
             self.params, self.opt_state, loss, acc = self._cached_step_fn(
                 self.params, self.opt_state, (self.cache_block, feats_d),
@@ -515,3 +565,62 @@ class Trainer:
         stats.t_wall = time.perf_counter() - t_epoch
         self._epoch += 1
         return stats
+
+    # ------------------------------------------------------------------ #
+    def refine_partition(self, replication_budget: float | None = None):
+        """Telemetry-driven partition refinement (method="telemetry").
+
+        Call between epochs with ``record_telemetry=True``: the empirical
+        per-edge appearance counts from the recorded training batches replace
+        the presample estimates as edge weights, ``_refine`` re-runs from the
+        current assignment, and the replication set is re-selected under the
+        (possibly overridden) budget. The producer, resident block, and
+        device sampler are all re-pointed at the new partition; plan-shape
+        high-water marks are kept — shapes only ever grow, so already
+        compiled steps stay valid. Returns the new ``Partition``.
+        """
+        from repro.core.partition import refine_partition as _refine_partition
+
+        if self.partition is None:
+            raise ValueError("refine_partition needs mode='split'")
+        if self.telemetry is None:
+            raise ValueError(
+                "refine_partition needs record_telemetry=True (no telemetry "
+                "was collected)"
+            )
+        budget = (
+            self.cfg.replication_budget
+            if replication_budget is None
+            else replication_budget
+        )
+        self.partition = _refine_partition(
+            self.ds.graph,
+            self.partition,
+            self.telemetry.as_weights(),
+            replication_budget=budget,
+        )
+        self.replication = self.partition.replication
+        self.rep_block = None
+        if self.replication is not None:
+            self.rep_block = jnp.asarray(
+                self.ds.features[self.replication.vertices].astype(
+                    np.float32, copy=False
+                )
+            )
+        self.producer.assignment = self.partition.assignment
+        self.producer.replication = self.replication
+        if self.device_sampler is not None:
+            from repro.sampler import DeviceSampler
+
+            self.device_sampler = DeviceSampler(
+                self.ds.graph,
+                self.partition.assignment,
+                self.cfg.num_devices,
+                list(self.cfg.fanouts),
+                self.cfg.seed,
+                host_sampler=self.sampler,
+                backend=self.cfg.sampler_backend,
+                interpret=self.cfg.sampler_interpret,
+            )
+            self.producer.device_sampler = self.device_sampler
+        return self.partition

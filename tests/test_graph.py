@@ -1,8 +1,7 @@
 """Graph substrate: CSR, datasets, neighbor sampling invariants."""
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # property tests degrade to skips without it
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st  # hypothesis or deterministic fallback
 
 from repro.graph.csr import build_csr, to_undirected
 from repro.graph.datasets import SYNTHETIC_DATASETS, make_dataset

@@ -3,12 +3,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-try:  # only the property tests need hypothesis; the sweeps run without it
-    from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st  # hypothesis or fallback
 
-    HAVE_HYPOTHESIS = True
-except ImportError:  # pragma: no cover
-    HAVE_HYPOTHESIS = False
+HAVE_HYPOTHESIS = True  # repro.testing provides a deterministic fallback
 
 from repro.kernels import segment_ops
 from repro.kernels.edge_softmax.ops import edge_softmax_pallas

@@ -280,12 +280,9 @@ def test_signature_keys_on_overlap_knobs(ds, part):
 # --------------------------------------------------------------------------- #
 # property-based sweep (skips cleanly without hypothesis)
 # --------------------------------------------------------------------------- #
-try:  # pragma: no cover - availability probe
-    from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st  # hypothesis or fallback
 
-    HAVE_HYPOTHESIS = True
-except ImportError:  # pragma: no cover
-    HAVE_HYPOTHESIS = False
+HAVE_HYPOTHESIS = True  # repro.testing provides a deterministic fallback
 
 if HAVE_HYPOTHESIS:
 

@@ -1,8 +1,7 @@
 """Partitioner (Eq. 2 heuristic) + presample properties."""
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # property tests degrade to skips without it
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st  # hypothesis or deterministic fallback
 
 from repro.core.partition import partition_graph
 from repro.core.presample import presample
