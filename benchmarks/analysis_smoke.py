@@ -1,0 +1,59 @@
+"""Analysis smoke gate: splint runs clean over the tree, fast.
+
+One row per checker family plus the full pass. Exits non-zero on any
+finding that is not suppressed by the checked-in baseline — the same
+contract the CI step enforces via ``python -m repro.analysis``. The
+timing column is the point of the "fast" claim: the pass is stdlib-AST
+only (the target code is never imported), so a full run is a few tens of
+milliseconds and there is no excuse to skip it locally.
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+from benchmarks.common import Row
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def run(smoke: bool = True, **_kwargs):
+    from repro.analysis import FAMILIES, run_all
+    from repro.analysis.__main__ import DEFAULT_BASELINE
+    from repro.analysis.findings import Baseline
+
+    per_family: dict[str, list] = {}
+    for fam in FAMILIES:
+        t0 = time.perf_counter()
+        per_family[fam] = run_all(ROOT, select=(fam,))
+        dt = (time.perf_counter() - t0) * 1e6
+        yield Row(
+            f"splint/{fam}", dt, f"findings={len(per_family[fam])}"
+        )
+
+    t0 = time.perf_counter()
+    findings = run_all(ROOT)
+    dt = (time.perf_counter() - t0) * 1e6
+
+    baseline_path = ROOT / DEFAULT_BASELINE
+    suppressed = 0
+    if baseline_path.exists():
+        findings, supp, _stale = Baseline.load(baseline_path).split(findings)
+        suppressed = len(supp)
+    yield Row(
+        "splint/full",
+        dt,
+        f"new={len(findings)} suppressed={suppressed}",
+    )
+    if smoke and findings:
+        for f in findings:
+            print(f"# {f.render()}")
+        raise SystemExit(
+            f"splint smoke gate: {len(findings)} unbaselined finding(s)"
+        )
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run():
+        print(row.csv())

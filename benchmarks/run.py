@@ -37,6 +37,14 @@ BENCHES = {
         "Fig. 5 — partitioner quality smoke gate",
         {"dataset": "tiny", "smoke": True},
     ),
+    # the splint static-analysis pass over the tree (docs/ANALYSIS.md):
+    # per-family timing rows + a gate that fails on any unbaselined
+    # finding; same checks as `python -m repro.analysis`
+    "analysis": (
+        "benchmarks.analysis_smoke",
+        "splint — static-analysis smoke gate",
+        {"smoke": True},
+    ),
 }
 
 

@@ -1,0 +1,58 @@
+"""splint: the repo-native static-analysis pass (docs/ANALYSIS.md).
+
+Three checker families over the source tree, all stdlib-AST based — the
+target code is never imported, so the pass runs in milliseconds with no
+jax (or device) in sight:
+
+  PL*  plan-lifecycle contracts  (analysis/plan_lifecycle.py)
+  HP*  hot-path purity           (analysis/purity.py)
+  KC*  kernel contracts          (analysis/kernel_contract.py)
+
+Run it as ``python -m repro.analysis``; CI gates on the exit code. The
+runtime complement (jit cache-miss counting) lives in
+``runtime/recompile.py``, not here — splint itself never traces anything.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.analysis.findings import Baseline, Finding, dedupe, to_json
+from repro.analysis.kernel_contract import KernelSpec, check_kernel_contract
+from repro.analysis.plan_lifecycle import (
+    ContractSpec,
+    Leg,
+    check_plan_lifecycle,
+)
+from repro.analysis.purity import PuritySpec, check_purity
+
+FAMILIES = ("PL", "HP", "KC")
+
+
+def run_all(root: Path, select: tuple[str, ...] = FAMILIES) -> list[Finding]:
+    """Run every selected checker family over one tree."""
+    root = Path(root)
+    findings: list[Finding] = []
+    if "PL" in select:
+        findings.extend(check_plan_lifecycle(root))
+    if "HP" in select:
+        findings.extend(check_purity(root))
+    if "KC" in select:
+        findings.extend(check_kernel_contract(root))
+    return dedupe(findings)
+
+
+__all__ = [
+    "Baseline",
+    "ContractSpec",
+    "FAMILIES",
+    "Finding",
+    "KernelSpec",
+    "Leg",
+    "PuritySpec",
+    "check_kernel_contract",
+    "check_plan_lifecycle",
+    "check_purity",
+    "dedupe",
+    "run_all",
+    "to_json",
+]

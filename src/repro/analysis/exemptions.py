@@ -1,0 +1,113 @@
+"""The per-field exemption registry for the plan-lifecycle checker.
+
+Every entry is ``(contract, field, leg) -> reason`` and asserts, with a
+reviewable reason, that the field deliberately skips that lifecycle leg.
+The checker enforces hygiene both ways: a missing entry for an unhandled
+field fails CI (PL001), an entry for a field that *became* handled fails
+too (PL003), and entries naming removed fields rot loudly (PL002).
+
+The dominant pattern is the ``signature`` leg: ``plan_signature`` keys the
+jit cache on one representative array per padded axis group, because jit
+retraces on *shapes* — two arrays forced to share an axis by construction
+cannot diverge, so keying both would only bloat the tuple. Each such
+exemption names the keyed representative it is tied to. If a refactor ever
+breaks the shared-axis invariant, the exemption's reason is the review
+trail pointing at what must change.
+"""
+from __future__ import annotations
+
+PLAN_LIFECYCLE_EXEMPTIONS: dict[tuple[str, str, str], str] = {
+    # ---- LayerPlan / repad ------------------------------------------------
+    ("LayerPlan", "send_count", "repad"): (
+        "(P, P) true-count matrix; both axes are the static device count, "
+        "there is no padded axis to grow"
+    ),
+    # ---- LayerPlan / signature -------------------------------------------
+    ("LayerPlan", "edge_dst", "signature"): (
+        "shares the (P, E) edge axis with edge_src, which is keyed; repad "
+        "grows the two in lockstep under the E{i} high-water mark"
+    ),
+    ("LayerPlan", "edge_mask", "signature"): (
+        "shares the (P, E) edge axis with edge_src, which is keyed"
+    ),
+    ("LayerPlan", "edge_perm", "signature"): (
+        "shares the (P, E) edge axis with edge_src, which is keyed — and is "
+        "never staged to device at all (see its staging exemption)"
+    ),
+    ("LayerPlan", "send_count", "signature"): (
+        "static (P, P) shape; P is already the leading element of every "
+        "signature tuple"
+    ),
+    ("LayerPlan", "n_local", "signature"): (
+        "not a traced array: the boundary is rebased into edge_src values "
+        "by repad_plan, and the padded front shapes (keyed via front_ids) "
+        "pin it — two plans with equal signatures have equal n_local"
+    ),
+    ("LayerPlan", "seg_offsets", "signature"): (
+        "(P, N_i + 1) is a pure function of the front width N_i, keyed via "
+        "the front_ids shape tuple"
+    ),
+    ("LayerPlan", "pack_dst", "signature"): (
+        "shares the (P, DB, EB) packed layout axes with pack_perm, which is "
+        "keyed; repad grows both under the same EB{i} mark"
+    ),
+    ("LayerPlan", "ledge_dst", "signature"): (
+        "shares the (P, EL) local-half axis with ledge_src, which is keyed "
+        "when halves are present"
+    ),
+    ("LayerPlan", "ledge_mask", "signature"): (
+        "shares the (P, EL) local-half axis with ledge_src, which is keyed"
+    ),
+    ("LayerPlan", "ledge_ids", "signature"): (
+        "shares the (P, EL) local-half axis with ledge_src, which is keyed"
+    ),
+    ("LayerPlan", "lpack_dst", "signature"): (
+        "shares the (P, DB, LEB) packed axes with lpack_perm, which is keyed"
+    ),
+    ("LayerPlan", "redge_dst", "signature"): (
+        "shares the (P, ER) remote-half axis with redge_src, which is keyed"
+    ),
+    ("LayerPlan", "redge_mask", "signature"): (
+        "shares the (P, ER) remote-half axis with redge_src, which is keyed"
+    ),
+    ("LayerPlan", "redge_ids", "signature"): (
+        "shares the (P, ER) remote-half axis with redge_src, which is keyed"
+    ),
+    ("LayerPlan", "rpack_dst", "signature"): (
+        "shares the (P, DB, REB) packed axes with rpack_perm, which is keyed"
+    ),
+    # ---- LayerPlan / staging ---------------------------------------------
+    ("LayerPlan", "send_count", "staging"): (
+        "host-side accounting only (shuffle_rows / wire-byte model); the "
+        "device consumes the padded send_idx, never the true counts"
+    ),
+    ("LayerPlan", "n_local", "staging"): (
+        "baked into the rebased edge_src values at repad time; the device "
+        "consumes mixed-buffer indices, never the boundary itself"
+    ),
+    ("LayerPlan", "edge_perm", "staging"): (
+        "producer-side permutation backing seg_offsets construction and "
+        "repad's layout invariant; the kernels consume pack_perm/pack_dst"
+    ),
+    # ---- CachePlan / signature -------------------------------------------
+    ("CachePlan", "local_mask", "signature"): (
+        "shares the (P, N) axis with local_slot, which is keyed"
+    ),
+    ("CachePlan", "recv_pos", "signature"): (
+        "shares the (P, P, Sc) axis with send_slot, which is keyed"
+    ),
+    ("CachePlan", "recv_mask", "signature"): (
+        "shares the (P, P, Sc) axis with send_slot, which is keyed"
+    ),
+    ("CachePlan", "miss_pos", "signature"): (
+        "shares the (P, M) miss axis with miss_ids, which is keyed"
+    ),
+    ("CachePlan", "miss_mask", "signature"): (
+        "shares the (P, M) miss axis with miss_ids, which is keyed"
+    ),
+    # ---- CachePlan / staging ---------------------------------------------
+    ("CachePlan", "miss_ids", "staging"): (
+        "host-side gather list: consumed by load_miss_features before "
+        "staging; the ids themselves never reach the device"
+    ),
+}

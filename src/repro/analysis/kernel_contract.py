@@ -1,0 +1,230 @@
+"""KC: the kernel contract checker (docs/ANALYSIS.md §KC).
+
+Every Pallas kernel package under ``src/repro/kernels/`` (and the device
+sampler, which is a kernel package in spirit) must ship the three-part
+contract this repo's kernels follow:
+
+  KC001  a ``ref.py`` — the pure-jnp reference semantics the kernel is
+         measured against
+  KC002  an ``ops.py`` — the public entry point with the interpret-mode
+         fallback and shape plumbing
+  KC003  a tolerance-pinned equivalence test: some module under ``tests/``
+         must import the package *and* pin ``rtol=``/``atol=`` in its
+         asserts — "looks about right" is not a contract
+  KC004  no low-precision accumulators: reduction scratch allocated in
+         bf16/fp16 loses the summation-order robustness the refs assume;
+         accumulate in f32 and cast on the way out
+
+A directory is a kernel package when it contains a ``kernel.py`` or an
+``ops.py``. The sampler directory is included explicitly.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from pathlib import Path
+
+from repro.analysis.astutil import _dotted_name
+from repro.analysis.findings import Finding
+
+LOW_PRECISION = {"bfloat16", "float16", "bf16", "fp16"}
+_ALLOC_CALLS = {"zeros", "empty", "full", "ones", "zeros_like", "empty_like"}
+
+
+@dataclass(frozen=True)
+class KernelSpec:
+    """Where to look for kernel packages and their tests."""
+
+    kernel_roots: tuple[str, ...] = ("src/repro/kernels",)
+    extra_packages: tuple[str, ...] = ("src/repro/sampler",)
+    tests_dir: str = "tests"
+
+
+def _kernel_packages(root: Path, spec: KernelSpec) -> list[Path]:
+    pkgs: list[Path] = []
+    for kroot in spec.kernel_roots:
+        base = root / kroot
+        if not base.is_dir():
+            continue
+        for child in sorted(base.iterdir()):
+            if child.is_dir() and (
+                (child / "kernel.py").exists() or (child / "ops.py").exists()
+            ):
+                pkgs.append(child)
+    for extra in spec.extra_packages:
+        path = root / extra
+        if path.is_dir():
+            pkgs.append(path)
+    return pkgs
+
+
+def _import_target(pkg: Path, root: Path) -> str:
+    """The dotted module path tests would import, e.g. repro.kernels.segsum."""
+    rel = pkg.relative_to(root)
+    parts = rel.parts
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    return ".".join(parts)
+
+
+def _test_modules(root: Path, spec: KernelSpec) -> list[tuple[Path, str, ast.AST]]:
+    out = []
+    tests = root / spec.tests_dir
+    if not tests.is_dir():
+        return out
+    for path in sorted(tests.glob("test_*.py")):
+        try:
+            text = path.read_text(encoding="utf-8")
+            out.append((path, text, ast.parse(text)))
+        except (OSError, SyntaxError):
+            continue
+    return out
+
+
+def _imports_package(tree: ast.AST, dotted: str) -> bool:
+    prefix = dotted + "."
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == dotted or alias.name.startswith(prefix):
+                    return True
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            if node.module == dotted or node.module.startswith(prefix):
+                return True
+    return False
+
+
+def _has_tolerance_pin(text: str, tree: ast.AST) -> bool:
+    """Whether any call in the module pins rtol=/atol= to a numeric value."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg in ("rtol", "atol"):
+                    return True
+        # TOL = dict(rtol=..., atol=...) indirection also counts — the
+        # dict() call above catches it; a literal {"rtol": ...} does too:
+        if isinstance(node, ast.Dict):
+            for k in node.keys:
+                if isinstance(k, ast.Constant) and k.value in ("rtol", "atol"):
+                    return True
+    # subprocess-style tests build their asserts inside a code string the
+    # AST cannot see into (e.g. the spmd multi-process harness); a literal
+    # rtol=/atol= anywhere in the source still counts as a pin
+    return re.search(r"\b[ra]tol\s*=", text) is not None
+
+
+def _low_precision_dtype(node: ast.expr) -> bool:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value in LOW_PRECISION
+    dotted = _dotted_name(node) or ""
+    return dotted.rsplit(".", 1)[-1] in LOW_PRECISION
+
+
+def _accumulator_findings(path: Path, relpath: str) -> list[Finding]:
+    """KC004 within one kernel source file."""
+    try:
+        tree = ast.parse(path.read_text(encoding="utf-8"))
+    except (OSError, SyntaxError):
+        return []
+    out: list[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        targets = [t.id for t in node.targets if isinstance(t, ast.Name)]
+        if not any("acc" in t.lower() for t in targets):
+            continue
+        call = node.value
+        if not isinstance(call, ast.Call):
+            continue
+        dotted = _dotted_name(call.func) or ""
+        if dotted.rsplit(".", 1)[-1] not in _ALLOC_CALLS:
+            continue
+        dtype_args = [kw.value for kw in call.keywords if kw.arg == "dtype"]
+        if len(call.args) >= 2:
+            dtype_args.append(call.args[1])
+        for arg in dtype_args:
+            if _low_precision_dtype(arg):
+                out.append(
+                    Finding(
+                        path=relpath,
+                        line=node.lineno,
+                        col=node.col_offset,
+                        rule="KC004",
+                        message=(
+                            f"accumulator {targets[0]!r} allocated in a "
+                            "low-precision dtype"
+                        ),
+                        hint=(
+                            "accumulate in float32 and cast on the way out; "
+                            "bf16 partial sums drift past the pinned "
+                            "tolerances"
+                        ),
+                    )
+                )
+    return out
+
+
+def check_kernel_contract(
+    root: Path, spec: KernelSpec | None = None
+) -> list[Finding]:
+    """Run the kernel contract over one tree; returns findings."""
+    spec = spec or KernelSpec()
+    findings: list[Finding] = []
+    tests = _test_modules(root, spec)
+
+    for pkg in _kernel_packages(root, spec):
+        rel = pkg.relative_to(root).as_posix()
+        if not (pkg / "ref.py").exists():
+            findings.append(
+                Finding(
+                    path=rel,
+                    line=1,
+                    rule="KC001",
+                    message=f"kernel package {rel} has no ref.py",
+                    hint=(
+                        "every kernel ships a pure-jnp reference; the "
+                        "equivalence tests diff against it"
+                    ),
+                )
+            )
+        if not (pkg / "ops.py").exists():
+            findings.append(
+                Finding(
+                    path=rel,
+                    line=1,
+                    rule="KC002",
+                    message=f"kernel package {rel} has no ops.py",
+                    hint=(
+                        "the public entry point (interpret fallback, shape "
+                        "plumbing) lives in ops.py, never in kernel.py"
+                    ),
+                )
+            )
+        dotted = _import_target(pkg, root)
+        covered = any(
+            _imports_package(tree, dotted) and _has_tolerance_pin(text, tree)
+            for _path, text, tree in tests
+        )
+        if not covered:
+            findings.append(
+                Finding(
+                    path=rel,
+                    line=1,
+                    rule="KC003",
+                    message=(
+                        f"no tolerance-pinned equivalence test imports "
+                        f"{dotted}"
+                    ),
+                    hint=(
+                        f"add a {spec.tests_dir}/ module importing {dotted} "
+                        "that asserts against ref.py with explicit "
+                        "rtol=/atol="
+                    ),
+                )
+            )
+        for src in sorted(pkg.glob("*.py")):
+            findings.extend(
+                _accumulator_findings(src, src.relative_to(root).as_posix())
+            )
+    return findings

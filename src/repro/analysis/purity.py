@@ -1,0 +1,347 @@
+"""HP: the hot-path purity lint (docs/ANALYSIS.md §HP).
+
+Walks every function reachable from the jitted step paths — the trainer's
+step factory, the GNN forwards, the shuffle/serve primitives, and the
+device sampling engine — and flags constructs that either fail at trace
+time, silently fall back to host execution, or trigger avoidable
+recompiles:
+
+  HP001  ``.item()`` / ``.tolist()`` / ``.block_until_ready()`` on a value
+         inside a jit-reachable function (host sync)
+  HP002  ``float()`` / ``int()`` / ``bool()`` applied to a non-static
+         expression (TracerConversionError at trace time, or a silent
+         host sync on concrete values)
+  HP003  ``np.random`` use (host RNG: untraceable, thread-unsafe, and
+         invisible to the keyed-RNG determinism contract)
+  HP004  ``np.asarray`` / ``np.array`` / ``jax.device_get`` on traced
+         values (forces materialization on host)
+  HP005  Python ``if``/``while`` on a traced boolean (``.any()`` /
+         ``.all()`` / ``jnp.any`` / ``jnp.all`` in the test — a
+         TracerBoolConversionError or a concretization point)
+  HP006  ``jax.jit`` static-arg declarations that do not match the wrapped
+         function's signature (silently traces the arg instead)
+  HP007  literal bf16/fp16 dtype cast outside the ``wire_cast`` choke
+         point (the wire format must have exactly one owner; stray
+         down-casts widen back on the next op and corrupt the §3a
+         accounting)
+
+Reachability is the conservative closure of ``astutil.reachable_functions``
+over (a) every jit-wrapped function under the root and (b) the configured
+entry list (functions called from inside jitted bodies through closures the
+static resolver cannot follow).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from repro.analysis.astutil import (
+    FunctionInfo,
+    ProjectIndex,
+    _dotted_name,
+    jit_entry_points,
+    reachable_functions,
+)
+from repro.analysis.findings import Finding, dedupe
+
+#: functions the jitted step paths call through closures/lambdas that the
+#: static call resolver cannot follow — the roots named by the ISSUE.
+DEFAULT_ENTRIES: tuple[tuple[str, str], ...] = (
+    ("src/repro/train/trainer.py", "Trainer._build_step"),
+    ("src/repro/models/gnn/layers.py", "gnn_forward"),
+    ("src/repro/models/gnn/layers.py", "gnn_forward_cached"),
+    ("src/repro/models/gnn/layers.py", "gnn_forward_spmd"),
+    ("src/repro/core/shuffle.py", "sim_serve_features"),
+    ("src/repro/core/shuffle.py", "spmd_serve_features"),
+    ("src/repro/sampler/engine.py", "sample_minibatch_spmd"),
+)
+
+#: (path, qualname) sites allowed to own a literal wire-dtype cast (HP007)
+WIRE_CAST_OWNERS: tuple[tuple[str, str], ...] = (
+    ("src/repro/core/shuffle.py", "wire_cast"),
+)
+
+LOW_PRECISION = {"bfloat16", "float16", "bf16", "fp16"}
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+_NP_MATERIALIZE = {"asarray", "array", "ascontiguousarray", "copy"}
+
+
+def _is_static_expr(node: ast.expr) -> bool:
+    """Whether an expression is trace-static (safe under float()/int()).
+
+    Constants, ``.shape``/``.ndim``/``.size`` reads, ``len()``, names, and
+    arithmetic over those are shape math — Python numbers at trace time.
+    Calls (other than ``len``) and subscripted array reads are not.
+    """
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Name):
+        return True  # a bare name: assume scalar config, not an array read
+    if isinstance(node, ast.Attribute):
+        return node.attr in ("shape", "ndim", "size", "dtype") or _is_static_expr(
+            node.value
+        )
+    if isinstance(node, ast.Subscript):
+        # shape[0] is static; anything_else[i] is an array read
+        return _is_static_expr(node.value) and isinstance(
+            node.value, ast.Attribute
+        ) and node.value.attr in ("shape",)
+    if isinstance(node, ast.BinOp):
+        return _is_static_expr(node.left) and _is_static_expr(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return _is_static_expr(node.operand)
+    if isinstance(node, ast.Call):
+        fn = _dotted_name(node.func) or ""
+        if fn in ("len", "min", "max") or fn.endswith(".ceil"):
+            return all(_is_static_expr(a) for a in node.args)
+        return False
+    return False
+
+
+def _traced_bool_test(test: ast.expr) -> ast.AST | None:
+    """The offending subexpression if a branch test reads a traced bool."""
+    for node in ast.walk(test):
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Attribute) and node.func.attr in (
+                "any",
+                "all",
+            ):
+                owner = _dotted_name(node.func.value) or ""
+                if owner.split(".")[0] in ("np", "numpy"):
+                    continue  # host numpy on host arrays
+                return node
+            dotted = _dotted_name(node.func) or ""
+            head, _, tail = dotted.partition(".")
+            if head == "jnp" and tail in ("any", "all", "logical_and",
+                                          "logical_or", "isnan", "isinf"):
+                return node
+    return None
+
+
+def _low_precision_const(node: ast.expr) -> bool:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value in LOW_PRECISION
+    dotted = _dotted_name(node) or ""
+    return dotted.rsplit(".", 1)[-1] in LOW_PRECISION
+
+
+@dataclass
+class PuritySpec:
+    """Tunable inputs so fixture trees can exercise every rule."""
+
+    entries: tuple[tuple[str, str], ...] = DEFAULT_ENTRIES
+    wire_cast_owners: tuple[tuple[str, str], ...] = WIRE_CAST_OWNERS
+    subdirs: tuple[str, ...] = ("src/repro",)
+    auto_jit_entries: bool = True
+    extra: dict = field(default_factory=dict)
+
+
+def _rules_for_function(fn: FunctionInfo, spec: PuritySpec) -> list[Finding]:
+    out: list[Finding] = []
+    is_wire_owner = (fn.path, fn.qualname) in spec.wire_cast_owners
+
+    for node in ast.walk(fn.node):
+        if isinstance(node, ast.Call):
+            dotted = _dotted_name(node.func) or ""
+            tail = dotted.rsplit(".", 1)[-1]
+            head = dotted.split(".")[0]
+
+            # HP001: explicit host syncs
+            if isinstance(node.func, ast.Attribute) and tail in _SYNC_METHODS:
+                owner = _dotted_name(node.func.value) or ""
+                if owner.split(".")[0] not in ("np", "numpy"):
+                    out.append(
+                        Finding(
+                            path=fn.path,
+                            line=node.lineno,
+                            col=node.col_offset,
+                            rule="HP001",
+                            message=(
+                                f".{tail}() inside jit-reachable "
+                                f"{fn.qualname} forces a host sync"
+                            ),
+                            hint=(
+                                "keep the value on device, or move this "
+                                "call off the jitted path"
+                            ),
+                        )
+                    )
+
+            # HP002: python scalar coercion of a traced value
+            if dotted in ("float", "int", "bool") and node.args:
+                if not _is_static_expr(node.args[0]):
+                    out.append(
+                        Finding(
+                            path=fn.path,
+                            line=node.lineno,
+                            col=node.col_offset,
+                            rule="HP002",
+                            message=(
+                                f"{dotted}() on a non-static expression in "
+                                f"jit-reachable {fn.qualname} (traces fail; "
+                                "concrete values host-sync)"
+                            ),
+                            hint=(
+                                "use jnp casts for arrays; hoist scalar "
+                                "coercions to setup code"
+                            ),
+                        )
+                    )
+
+            # HP004: host materialization of traced values
+            if (
+                head in ("np", "numpy") and tail in _NP_MATERIALIZE
+            ) or dotted in ("jax.device_get", "device_get"):
+                out.append(
+                    Finding(
+                        path=fn.path,
+                        line=node.lineno,
+                        col=node.col_offset,
+                        rule="HP004",
+                        message=(
+                            f"{dotted}() in jit-reachable {fn.qualname} "
+                            "materializes on host"
+                        ),
+                        hint="use jnp.asarray / keep the array on device",
+                    )
+                )
+
+            # HP007: literal low-precision cast outside wire_cast
+            if not is_wire_owner:
+                cast_args: list[ast.expr] = []
+                if isinstance(node.func, ast.Attribute) and tail == "astype":
+                    cast_args = list(node.args)
+                cast_args += [
+                    kw.value for kw in node.keywords if kw.arg == "dtype"
+                ]
+                for arg in cast_args:
+                    if _low_precision_const(arg):
+                        out.append(
+                            Finding(
+                                path=fn.path,
+                                line=node.lineno,
+                                col=node.col_offset,
+                                rule="HP007",
+                                message=(
+                                    "literal low-precision cast in "
+                                    f"jit-reachable {fn.qualname} bypasses "
+                                    "the wire_cast choke point"
+                                ),
+                                hint=(
+                                    "route wire-format casts through "
+                                    "core.shuffle.wire_cast (DESIGN.md §3a)"
+                                ),
+                            )
+                        )
+
+        # HP003: host RNG
+        if isinstance(node, ast.Attribute):
+            dotted = _dotted_name(node) or ""
+            if dotted.startswith(("np.random", "numpy.random")):
+                out.append(
+                    Finding(
+                        path=fn.path,
+                        line=node.lineno,
+                        col=node.col_offset,
+                        rule="HP003",
+                        message=(
+                            f"np.random use in jit-reachable {fn.qualname} "
+                            "(untraceable host RNG)"
+                        ),
+                        hint=(
+                            "use the keyed jax.random / counter-based "
+                            "streams (sampler/rng.py)"
+                        ),
+                    )
+                )
+
+        # HP005: branching on traced booleans
+        if isinstance(node, (ast.If, ast.While)):
+            offender = _traced_bool_test(node.test)
+            if offender is not None:
+                out.append(
+                    Finding(
+                        path=fn.path,
+                        line=node.lineno,
+                        col=node.col_offset,
+                        rule="HP005",
+                        message=(
+                            "Python branch on a traced boolean in "
+                            f"jit-reachable {fn.qualname}"
+                        ),
+                        hint="use jnp.where / lax.cond instead",
+                    )
+                )
+    return out
+
+
+def _check_static_args(fn: FunctionInfo) -> list[Finding]:
+    """HP006 over one jit-wrapped function's static-arg declarations."""
+    out: list[Finding] = []
+    node = fn.node
+    params = [a.arg for a in node.args.args + node.args.kwonlyargs]
+    declared: list[tuple[str, ast.expr]] = []
+    for dec in getattr(node, "decorator_list", []):
+        if not isinstance(dec, ast.Call):
+            continue
+        dotted = _dotted_name(dec.func) or ""
+        if not (dotted.endswith("jit") or dotted.rsplit(".", 1)[-1] == "partial"):
+            continue
+        for kw in dec.keywords:
+            if kw.arg in ("static_argnames", "static_argnums"):
+                declared.append((dec.lineno, kw.arg, kw.value))
+    for dec_line, kind, value in declared:
+        names: list[ast.expr] = (
+            list(value.elts)
+            if isinstance(value, (ast.Tuple, ast.List))
+            else [value]
+        )
+        for item in names:
+            if not isinstance(item, ast.Constant):
+                continue
+            ok = (
+                item.value in params
+                if kind == "static_argnames"
+                else isinstance(item.value, int)
+                and -len(params) <= item.value < len(params)
+            )
+            if not ok:
+                out.append(
+                    Finding(
+                        path=fn.path,
+                        line=dec_line,
+                        rule="HP006",
+                        message=(
+                            f"{kind} entry {item.value!r} does not match a "
+                            f"parameter of {fn.qualname} — jax will trace "
+                            "(or reject) the argument instead"
+                        ),
+                        hint="keep static-arg declarations in sync with the "
+                        "signature",
+                    )
+                )
+    return out
+
+
+def check_purity(root: Path, spec: PuritySpec | None = None) -> list[Finding]:
+    """Run the hot-path purity lint over one tree; returns findings."""
+    spec = spec or PuritySpec()
+    index = ProjectIndex(root, subdirs=spec.subdirs)
+
+    entries: list[FunctionInfo] = []
+    if spec.auto_jit_entries:
+        entries.extend(jit_entry_points(index))
+    for path, qualname in spec.entries:
+        fn = index.function(path, qualname)
+        if fn is not None:
+            entries.append(fn)
+
+    findings: list[Finding] = []
+    for fn in reachable_functions(index, entries):
+        findings.extend(_rules_for_function(fn, spec))
+    # HP006 applies to every jit site, reachable or not — a broken static
+    # declaration is latent until someone calls the function
+    for fn in jit_entry_points(index):
+        findings.extend(_check_static_args(fn))
+    return dedupe(findings)

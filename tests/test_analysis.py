@@ -1,0 +1,382 @@
+"""splint self-tests: each rule fires on a fixture tree with known
+violations (exact rule ids + file:line spans), and the real tree runs
+clean end-to-end — the same invocation CI gates on."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import run_all
+from repro.analysis.findings import Baseline, Finding
+from repro.analysis.kernel_contract import KernelSpec, check_kernel_contract
+from repro.analysis.plan_lifecycle import (
+    ContractSpec,
+    Leg,
+    check_plan_lifecycle,
+)
+from repro.analysis.purity import PuritySpec, check_purity
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _write(root: Path, rel: str, body: str) -> None:
+    path = root / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(body), encoding="utf-8")
+
+
+# --------------------------------------------------------------------- #
+# PL: plan lifecycle
+# --------------------------------------------------------------------- #
+def _toy_contract() -> tuple[ContractSpec, ...]:
+    return (
+        ContractSpec(
+            name="ToyPlan",
+            dataclass_path="pkg/plan.py",
+            dataclass_name="ToyPlan",
+            legs=(
+                Leg("repad", "pkg/plan.py", "repad"),
+                Leg("signature", "pkg/sig.py", "signature"),
+                Leg("staging", "pkg/stage.py", "to_device"),
+            ),
+        ),
+    )
+
+
+def _toy_tree(tmp_path: Path, *, sig_handles_beta: bool = True) -> Path:
+    beta_sig = "p.beta.shape," if sig_handles_beta else ""
+    _write(
+        tmp_path,
+        "pkg/plan.py",
+        f"""
+        from dataclasses import dataclass
+
+        @dataclass
+        class ToyPlan:
+            alpha: object
+            beta: object
+            gamma: object
+
+        def repad(p, hwm):
+            for name in ("alpha", "beta"):
+                setattr(p, name, pad(getattr(p, name)))
+            return p
+        """,
+    )
+    _write(
+        tmp_path,
+        "pkg/sig.py",
+        f"""
+        def signature(p):
+            return (p.alpha.shape, {beta_sig})
+        """,
+    )
+    _write(
+        tmp_path,
+        "pkg/stage.py",
+        """
+        def to_device(p):
+            return {"alpha": p.alpha, "beta": p.beta}
+        """,
+    )
+    return tmp_path
+
+
+def test_pl001_unhandled_field_names_field_and_missing_site(tmp_path):
+    root = _toy_tree(tmp_path)
+    findings = check_plan_lifecycle(root, _toy_contract(), exemptions={})
+    keys = {(f.rule, f.message.split(" — ")[0]) for f in findings}
+    # gamma skips every leg; alpha/beta are covered by loop + f-string legs
+    assert keys == {
+        ("PL001", "ToyPlan.gamma is not handled in the repad leg"),
+        ("PL001", "ToyPlan.gamma is not handled in the signature leg"),
+        ("PL001", "ToyPlan.gamma is not handled in the staging leg"),
+    }
+    gamma = [f for f in findings if f.rule == "PL001"][0]
+    assert gamma.path == "pkg/plan.py"
+    assert gamma.line == 8  # the dataclass field line, not the leg's
+    assert "repad" in findings[0].message and "pkg/plan.py" in findings[0].message
+
+
+def test_pl001_exemption_with_reason_suppresses(tmp_path):
+    root = _toy_tree(tmp_path)
+    exemptions = {
+        ("ToyPlan", "gamma", leg): "host-side only" for leg in
+        ("repad", "signature", "staging")
+    }
+    assert check_plan_lifecycle(root, _toy_contract(), exemptions) == []
+
+
+def test_pl003_stale_exemption_fires_when_field_becomes_handled(tmp_path):
+    root = _toy_tree(tmp_path)
+    exemptions = {
+        ("ToyPlan", "gamma", leg): "host-side only" for leg in
+        ("repad", "signature", "staging")
+    }
+    exemptions[("ToyPlan", "beta", "signature")] = "obsolete"
+    findings = check_plan_lifecycle(root, _toy_contract(), exemptions)
+    assert [f.rule for f in findings] == ["PL003"]
+    assert "beta" in findings[0].message
+
+
+def test_deleting_signature_leg_fails_with_pointer(tmp_path):
+    """The acceptance criterion: drop one leg registration -> CI failure
+    naming the field and the site that must handle it."""
+    root = _toy_tree(tmp_path, sig_handles_beta=False)
+    exemptions = {
+        ("ToyPlan", "gamma", leg): "host-side only" for leg in
+        ("repad", "signature", "staging")
+    }
+    findings = check_plan_lifecycle(root, _toy_contract(), exemptions)
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.rule == "PL001"
+    assert "ToyPlan.beta" in f.message and "signature" in f.message
+    assert "pkg/sig.py" in f.message  # points at the missing site
+    assert f.path == "pkg/plan.py" and f.line == 7
+
+
+def test_pl002_exemption_for_removed_field(tmp_path):
+    root = _toy_tree(tmp_path)
+    exemptions = {
+        ("ToyPlan", "gamma", leg): "host-side only" for leg in
+        ("repad", "signature", "staging")
+    }
+    exemptions[("ToyPlan", "deleted_field", "repad")] = "was removed"
+    findings = check_plan_lifecycle(root, _toy_contract(), exemptions)
+    assert [f.rule for f in findings] == ["PL002"]
+    assert "deleted_field" in findings[0].message
+
+
+def test_pl004_missing_leg_function(tmp_path):
+    root = _toy_tree(tmp_path)
+    contracts = (
+        ContractSpec(
+            name="ToyPlan",
+            dataclass_path="pkg/plan.py",
+            dataclass_name="ToyPlan",
+            legs=(Leg("repad", "pkg/plan.py", "renamed_away"),),
+        ),
+    )
+    findings = check_plan_lifecycle(root, contracts, exemptions={})
+    assert [f.rule for f in findings] == ["PL004"]
+    assert "renamed_away" in findings[0].message
+
+
+# --------------------------------------------------------------------- #
+# HP: hot-path purity
+# --------------------------------------------------------------------- #
+def _purity_spec() -> PuritySpec:
+    return PuritySpec(
+        entries=(("pkg/hot.py", "step"),),
+        wire_cast_owners=(("pkg/hot.py", "wire_cast"),),
+        subdirs=("pkg",),
+    )
+
+
+def test_purity_rules_fire_with_exact_spans(tmp_path):
+    _write(
+        tmp_path,
+        "pkg/hot.py",
+        """
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        def step(x):
+            y = helper(x)
+            v = x.item()
+            w = float(x[0])
+            z = np.asarray(x)
+            r = np.random.rand(3)
+            if (x > 0).any():
+                y = y + 1
+            return y + v + w + z + r
+
+        def helper(x):
+            return x.astype(jnp.bfloat16)
+
+        def wire_cast(x):
+            return x.astype(jnp.bfloat16)
+
+        def cold(x):
+            return x.item()
+        """,
+    )
+    findings = check_purity(tmp_path, _purity_spec())
+    got = {(f.rule, f.path, f.line) for f in findings}
+    assert got == {
+        ("HP001", "pkg/hot.py", 8),   # x.item()
+        ("HP002", "pkg/hot.py", 9),   # float(x[0])
+        ("HP004", "pkg/hot.py", 10),  # np.asarray
+        ("HP003", "pkg/hot.py", 11),  # np.random
+        ("HP005", "pkg/hot.py", 12),  # if (...).any()
+        ("HP007", "pkg/hot.py", 17),  # bf16 cast in helper (reached via step)
+    }
+    # wire_cast owns its cast; `cold` is unreachable from the entry
+    assert not any(f.line in (20, 23) for f in findings)
+
+
+def test_purity_hp006_static_argnames_mismatch(tmp_path):
+    _write(
+        tmp_path,
+        "pkg/hot.py",
+        """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("caps", "typo"))
+        def step(x, caps):
+            return x
+        """,
+    )
+    findings = check_purity(tmp_path, _purity_spec())
+    assert [(f.rule, f.line) for f in findings] == [("HP006", 5)]
+    assert "'typo'" in findings[0].message
+
+
+def test_purity_shape_math_is_clean(tmp_path):
+    _write(
+        tmp_path,
+        "pkg/hot.py",
+        """
+        import jax.numpy as jnp
+
+        def step(x, caps):
+            n = int(x.shape[0] * 1.5)
+            m = float(len(caps))
+            if n == 0:
+                return x
+            return jnp.zeros((n,), dtype=x.dtype) + m
+        """,
+    )
+    assert check_purity(tmp_path, _purity_spec()) == []
+
+
+# --------------------------------------------------------------------- #
+# KC: kernel contracts
+# --------------------------------------------------------------------- #
+def _kernel_spec() -> KernelSpec:
+    return KernelSpec(
+        kernel_roots=("kernels",), extra_packages=(), tests_dir="tests"
+    )
+
+
+def test_kernel_contract_missing_pieces(tmp_path):
+    _write(tmp_path, "kernels/good/kernel.py", "def k():\n    pass\n")
+    _write(tmp_path, "kernels/good/ops.py", "def op():\n    pass\n")
+    _write(tmp_path, "kernels/good/ref.py", "def ref():\n    pass\n")
+    _write(
+        tmp_path,
+        "tests/test_good.py",
+        """
+        from kernels.good.ops import op
+        def test_eq():
+            assert_allclose(1, 1, rtol=1e-5, atol=1e-6)
+        """,
+    )
+    _write(tmp_path, "kernels/bad/kernel.py", "def k():\n    pass\n")
+    findings = check_kernel_contract(tmp_path, _kernel_spec())
+    got = {(f.rule, f.path) for f in findings}
+    assert got == {
+        ("KC001", "kernels/bad"),  # no ref.py
+        ("KC002", "kernels/bad"),  # no ops.py
+        ("KC003", "kernels/bad"),  # no tolerance-pinned test
+    }
+
+
+def test_kernel_contract_test_without_tolerance_does_not_count(tmp_path):
+    _write(tmp_path, "kernels/k/ops.py", "def op():\n    pass\n")
+    _write(tmp_path, "kernels/k/ref.py", "def ref():\n    pass\n")
+    _write(
+        tmp_path,
+        "tests/test_k.py",
+        """
+        from kernels.k.ops import op
+        def test_runs():
+            assert op() is None
+        """,
+    )
+    findings = check_kernel_contract(tmp_path, _kernel_spec())
+    assert [f.rule for f in findings] == ["KC003"]
+
+
+def test_kernel_contract_low_precision_accumulator(tmp_path):
+    _write(tmp_path, "kernels/k/ops.py", "def op():\n    pass\n")
+    _write(tmp_path, "kernels/k/ref.py", "def ref():\n    pass\n")
+    _write(
+        tmp_path,
+        "tests/test_k.py",
+        "from kernels.k.ops import op\ndef t():\n    f(rtol=1e-5)\n",
+    )
+    _write(
+        tmp_path,
+        "kernels/k/kernel.py",
+        """
+        import jax.numpy as jnp
+
+        def body(ref):
+            acc = jnp.zeros((8, 128), dtype=jnp.bfloat16)
+            out = jnp.zeros((8, 128), dtype=jnp.float32)
+            return acc + out
+        """,
+    )
+    findings = check_kernel_contract(tmp_path, _kernel_spec())
+    assert [(f.rule, f.path, f.line) for f in findings] == [
+        ("KC004", "kernels/k/kernel.py", 5)
+    ]
+
+
+# --------------------------------------------------------------------- #
+# baseline mechanics
+# --------------------------------------------------------------------- #
+def test_baseline_split_new_suppressed_stale():
+    f1 = Finding("a.py", 3, "HP001", "x.item() somewhere")
+    f2 = Finding("b.py", 9, "KC003", "no test")
+    base = Baseline.from_findings([f1], reason="parked")
+    new, suppressed, stale = base.split([f1, f2])
+    assert new == [f2] and suppressed == [f1] and stale == []
+    # line drift does not un-suppress
+    drifted = Finding("a.py", 30, "HP001", "x.item() somewhere")
+    new, suppressed, stale = base.split([drifted])
+    assert new == [] and len(suppressed) == 1
+    # fixed findings surface the entry as stale
+    new, suppressed, stale = base.split([f2])
+    assert [e["message"] for e in stale] == ["x.item() somewhere"]
+
+
+def test_baseline_roundtrip_and_version_gate(tmp_path):
+    f = Finding("a.py", 1, "PL001", "msg")
+    path = tmp_path / "baseline.json"
+    Baseline.from_findings([f], reason="r").save(path)
+    assert Baseline.load(path).entries[0]["rule"] == "PL001"
+    path.write_text('{"version": 99, "findings": []}')
+    with pytest.raises(ValueError, match="version"):
+        Baseline.load(path)
+
+
+# --------------------------------------------------------------------- #
+# the real tree: clean end-to-end, same invocation CI gates on
+# --------------------------------------------------------------------- #
+def test_real_tree_is_clean_inprocess():
+    findings = run_all(REPO)
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_cli_clean_run_and_exit_codes():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--root", str(REPO),
+         "--no-baseline"],
+        capture_output=True, text=True, cwd=REPO,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "clean" in proc.stdout
+    # unknown rule families are a usage error, not a silent no-op
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--root", str(REPO),
+         "--select", "BOGUS"],
+        capture_output=True, text=True, cwd=REPO,
+    )
+    assert proc.returncode == 2
