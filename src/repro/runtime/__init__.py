@@ -17,6 +17,7 @@ from repro.runtime.plan_source import (
     make_plan_source,
 )
 from repro.runtime.prefetch import OrderedPrefetcher, PrefetchStats
+from repro.runtime.recompile import RecompileEvent, RecompileTracer
 from repro.runtime.signature import SignatureCache, plan_signature
 
 __all__ = [
@@ -28,6 +29,8 @@ __all__ = [
     "PlanBatch",
     "PlanProducer",
     "PlanSource",
+    "RecompileEvent",
+    "RecompileTracer",
     "SerialPlanSource",
     "SignatureCache",
     "make_plan_source",

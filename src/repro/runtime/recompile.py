@@ -1,0 +1,112 @@
+"""Runtime recompile tracing: count jit cache misses per training step.
+
+The static side of the recompile story lives in ``repro.analysis`` (the
+plan-lifecycle checker proves every plan field is repadded/keyed/staged);
+this module is the runtime witness. A ``RecompileTracer`` holds a set of
+named jitted callables and, once per step, diffs each one's compiled-trace
+cache size (``PjitFunction._cache_size``) against the last observation.
+Any growth is a cache miss: the step paid a full retrace + compile.
+
+The steady-state contract (DESIGN.md §6): with high-water-mark repadding
+and signature-keyed delivery, an epoch at fixed caps compiles on the first
+few batches only — *zero* misses once warm. ``tests/test_runtime.py``
+regresses exactly that over every plan-source mode; the trainer exposes the
+per-epoch miss counts in ``EpochStats.recompiles`` when
+``TrainConfig.trace_recompiles`` is set.
+
+The probe is read-only and O(#functions) per step — cheap enough to leave
+on in benchmarks. ``_cache_size`` is private jax API (present throughout
+the 0.4.x line this repo pins); ``register`` degrades loudly if it ever
+disappears so the tracer can never silently report zero.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+def cache_size(fn) -> int | None:
+    """The compiled-trace cache size of a jitted callable, else ``None``."""
+    probe = getattr(fn, "_cache_size", None)
+    if probe is None:
+        return None
+    try:
+        return int(probe())
+    except Exception:
+        return None
+
+
+@dataclass(frozen=True)
+class RecompileEvent:
+    """One step that paid at least one retrace."""
+
+    step: int
+    context: str
+    misses: dict[str, int]  # fn name -> new cache entries this step
+
+    @property
+    def total(self) -> int:
+        return sum(self.misses.values())
+
+
+@dataclass
+class RecompileTracer:
+    """Diffs registered jit caches once per step; records miss events."""
+
+    steps: int = 0
+    events: list[RecompileEvent] = field(default_factory=list)
+    _fns: dict = field(default_factory=dict, repr=False)
+    _last: dict = field(default_factory=dict, repr=False)
+
+    def register(self, name: str, fn) -> None:
+        """Track ``fn`` under ``name``; baselines at the current size."""
+        size = cache_size(fn)
+        if size is None:
+            raise TypeError(
+                f"cannot trace {name!r}: object exposes no _cache_size() "
+                "(not a jitted function, or the private jax API moved)"
+            )
+        self._fns[name] = fn
+        self._last[name] = size
+
+    def step(self, context: str = "") -> dict[str, int]:
+        """Record one step boundary; returns this step's misses by name."""
+        misses: dict[str, int] = {}
+        for name, fn in self._fns.items():
+            size = cache_size(fn)
+            if size is None:
+                continue
+            grew = size - self._last[name]
+            if grew > 0:
+                misses[name] = grew
+            self._last[name] = size
+        if misses:
+            self.events.append(RecompileEvent(self.steps, context, misses))
+        self.steps += 1
+        return misses
+
+    # ---- windowed summaries (per-epoch reporting) ---------------------- #
+    def mark(self) -> tuple[int, int]:
+        """An opaque position: pass to ``since`` to summarize a window."""
+        return (self.steps, len(self.events))
+
+    def since(self, mark: tuple[int, int]) -> dict:
+        """Summary of the window from ``mark`` to now."""
+        step0, event0 = mark
+        events = self.events[event0:]
+        by_fn: dict[str, int] = {}
+        for ev in events:
+            for name, n in ev.misses.items():
+                by_fn[name] = by_fn.get(name, 0) + n
+        return {
+            "steps": self.steps - step0,
+            "misses": sum(by_fn.values()),
+            "by_fn": by_fn,
+            "miss_steps": [ev.step for ev in events],
+        }
+
+    @property
+    def total_misses(self) -> int:
+        return sum(ev.total for ev in self.events)
+
+    def summary(self) -> dict:
+        return self.since((0, 0))

@@ -95,6 +95,10 @@ class TrainConfig:
     # from actual training batches; feed it back between epochs via
     # ``Trainer.refine_partition()`` (method="telemetry").
     record_telemetry: bool = False
+    # Count jit cache misses per step (runtime.recompile.RecompileTracer);
+    # per-epoch counts land in ``EpochStats.recompiles``. Steady state at
+    # fixed caps must be zero — tests/test_runtime.py regresses this.
+    trace_recompiles: bool = False
     seed: int = 0
 
 
@@ -153,6 +157,9 @@ class EpochStats:
     pipeline: dict = field(default_factory=dict)  # queue/signature stats
     t_wall: float = 0.0  # consumer wall time for the whole epoch
     t_first_iter: float = 0.0  # includes pipeline fill (first-batch wait)
+    # jit cache misses this epoch (trace_recompiles=True): {"steps", "misses",
+    # "by_fn", "miss_steps"} from runtime.recompile.RecompileTracer.since()
+    recompiles: dict = field(default_factory=dict)
 
     def steady_step_seconds(self) -> float:
         """Per-step wall time excluding the pipeline-fill first iteration."""
@@ -320,6 +327,17 @@ class Trainer:
                 backend=cfg.sampler_backend,
                 interpret=cfg.sampler_interpret,
             )
+        self.recompiles = None
+        if cfg.trace_recompiles:
+            from repro.runtime.recompile import RecompileTracer
+
+            self.recompiles = RecompileTracer()
+            self.recompiles.register("step", self._step_fn)
+            self.recompiles.register("cached_step", self._cached_step_fn)
+            if self.device_sampler is not None:
+                from repro.sampler.engine import _sample_device
+
+                self.recompiles.register("sample_device", _sample_device)
         self.producer = PlanProducer(
             self.sampler,
             dataset.features,
@@ -450,6 +468,8 @@ class Trainer:
                 self.params, self.opt_state, jnp.asarray(feats), plan_arrays,
                 jnp.asarray(labels),
             )
+        if self.recompiles is not None:
+            self.recompiles.step("train_iter")
         loss = float(loss)
         t_compute = time.perf_counter() - t0
 
@@ -551,16 +571,21 @@ class Trainer:
         """
         stats = EpochStats()
         source = self.plan_source_for(self._epoch, max_iters)
+        mark = self.recompiles.mark() if self.recompiles is not None else None
         t_epoch = time.perf_counter()
         try:
             for batch in source:
                 t0 = time.perf_counter()
                 loss, acc = self._step_batch(batch)
                 stats.iters.append(self._iter_stats(batch, loss, acc, t0))
+                if self.recompiles is not None:
+                    self.recompiles.step(f"epoch{self._epoch}")
                 if stats.t_first_iter == 0.0:
                     stats.t_first_iter = time.perf_counter() - t_epoch
         finally:
             source.close()
+        if mark is not None:
+            stats.recompiles = self.recompiles.since(mark)
         stats.pipeline = source.stats()
         stats.t_wall = time.perf_counter() - t_epoch
         self._epoch += 1
