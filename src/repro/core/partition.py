@@ -449,16 +449,19 @@ class EdgeTelemetry:
     stage, but from the mini-batches the trainer *actually* runs — the
     empirical feedback the ``telemetry`` partition method and
     ``refine_partition`` consume. ``record`` is called from plan-producer
-    threads (the pipelined sources are multi-worker), so buffering and
-    flushing happen under a lock; like ``presample._accumulate``, only index
-    arrays are buffered and the dense bincount add is amortized over many
-    batches.
+    threads (the pipelined sources are multi-worker), so two locks split the
+    work: the buffer lock only ever guards O(batch) list appends and pointer
+    swaps, while the O(V+E) concatenate+bincount runs outside it — one
+    producer flushing must not stall its siblings mid-epoch. The dense
+    accumulators get their own lock; merges are commutative adds, so flush
+    order across threads cannot change the totals.
     """
 
     _FLUSH_EVERY = 64  # buffered batches between dense bincount flushes
 
     def __init__(self, num_nodes: int, num_edges: int):
-        self._lock = threading.Lock()
+        self._lock = threading.Lock()  # buffers + num_batches
+        self._dense_lock = threading.Lock()  # _k_v/_k_e merges
         self._vbuf: list[np.ndarray] = []
         self._ebuf: list[np.ndarray] = []
         self._k_v = np.zeros(num_nodes, dtype=np.int64)
@@ -471,34 +474,48 @@ class EdgeTelemetry:
             self._vbuf.extend(sample.frontiers[:-1])
             self._ebuf.extend(layer.edge_id for layer in sample.layers)
             self.num_batches += 1
-            if self.num_batches % self._FLUSH_EVERY == 0:
-                self._flush_locked()
+            if self.num_batches % self._FLUSH_EVERY != 0:
+                return
+            vbuf, self._vbuf = self._vbuf, []
+            ebuf, self._ebuf = self._ebuf, []
+        self._merge(vbuf, ebuf)
 
-    def _flush_locked(self) -> None:
-        if self._vbuf:
-            verts = np.concatenate(self._vbuf)
-            self._k_v += np.bincount(verts, minlength=self._k_v.shape[0])
-            self._vbuf.clear()
-        if self._ebuf:
-            eids = np.concatenate(self._ebuf)
+    def _merge(self, vbuf: list[np.ndarray], ebuf: list[np.ndarray]) -> None:
+        """Bincount outside any lock; only the dense adds are serialized."""
+        k_v = k_e = None
+        if vbuf:
+            verts = np.concatenate(vbuf)
+            k_v = np.bincount(verts, minlength=self._k_v.shape[0])
+        if ebuf:
+            eids = np.concatenate(ebuf)
             eids = eids[eids >= 0]  # self-loop sentinels are not CSR edges
-            self._k_e += np.bincount(eids, minlength=self._k_e.shape[0])
-            self._ebuf.clear()
+            k_e = np.bincount(eids, minlength=self._k_e.shape[0])
+        with self._dense_lock:
+            if k_v is not None:
+                self._k_v += k_v
+            if k_e is not None:
+                self._k_e += k_e
 
     def as_weights(self) -> PresampleWeights:
         """Empirical weights: per-batch appearance rates.
 
         Only the *relative* weights matter to the partitioner (balance and
         cut are both scale-free up to the tiny tie-break offsets), so counts
-        are normalized per recorded batch.
+        are normalized per recorded batch. Callers invoke this between
+        epochs (producers quiescent); a racing ``record`` would merge its
+        counts either before or after the snapshot, never partially.
         """
         with self._lock:
-            self._flush_locked()
-            denom = float(max(self.num_batches, 1))
+            vbuf, self._vbuf = self._vbuf, []
+            ebuf, self._ebuf = self._ebuf, []
+            num_batches = self.num_batches
+        self._merge(vbuf, ebuf)
+        with self._dense_lock:
+            denom = float(max(num_batches, 1))
             return PresampleWeights(
                 vertex_weight=self._k_v / denom,
                 edge_weight=self._k_e / denom,
-                num_epochs=max(self.num_batches, 1),
+                num_epochs=max(num_batches, 1),
             )
 
 

@@ -233,7 +233,6 @@ def test_multilevel_used_on_graphs_above_coarsen_floor():
     build_csr import silently disabled)."""
     rng = np.random.default_rng(0)
     g = _random_graph(rng, 600, 3000)
-    w_v = np.ones(600)
     part = partition_graph(g, 4, method="edge", seed=0)
     assert part.assignment.shape == (600,)
     assert set(np.unique(part.assignment)) <= set(range(4))
@@ -278,3 +277,61 @@ def test_replication_respects_budget_exactly(setup, seed, budget, num_parts):
     mask = np.ones(n, dtype=bool)
     mask[rep.vertices] = False
     assert (rep.slot_of[mask] == -1).all()
+
+
+# --------------------------------------------------------------------------- #
+# telemetry accumulator: threaded producers, exact counts
+# --------------------------------------------------------------------------- #
+def test_edge_telemetry_threaded_counts_are_exact():
+    """Concurrent producer threads (the pipelined sources are multi-worker)
+    must accumulate exactly the counts a serial recording would: the flush
+    moves the O(V+E) bincount outside the buffer lock, and the dense merges
+    are commutative adds, so no interleaving may lose or double-count."""
+    import threading as th
+    from types import SimpleNamespace
+
+    from repro.core.partition import EdgeTelemetry
+
+    num_nodes, num_edges, per_thread = 50, 80, 100  # crosses _FLUSH_EVERY
+    rng = np.random.default_rng(3)
+
+    def fake_sample(r):
+        layers = [
+            SimpleNamespace(edge_id=r.integers(-1, num_edges, size=12))
+            for _ in range(2)
+        ]
+        frontiers = [r.integers(0, num_nodes, size=9) for _ in range(3)]
+        return SimpleNamespace(layers=layers, frontiers=frontiers)
+
+    samples = [fake_sample(rng) for _ in range(4 * per_thread)]
+    tel = EdgeTelemetry(num_nodes, num_edges)
+    threads = [
+        th.Thread(
+            target=lambda chunk: [tel.record(s) for s in chunk],
+            args=(samples[i * per_thread:(i + 1) * per_thread],),
+        )
+        for i in range(4)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    want_v = np.zeros(num_nodes, dtype=np.int64)
+    want_e = np.zeros(num_edges, dtype=np.int64)
+    for s in samples:
+        for f in s.frontiers[:-1]:
+            want_v += np.bincount(f, minlength=num_nodes)
+        for layer in s.layers:
+            eids = layer.edge_id[layer.edge_id >= 0]
+            want_e += np.bincount(eids, minlength=num_edges)
+
+    w = tel.as_weights()
+    assert tel.num_batches == len(samples)
+    # integer counts survive the per-batch normalization up to fp rounding
+    np.testing.assert_allclose(
+        w.vertex_weight * len(samples), want_v, rtol=1e-12, atol=1e-9
+    )
+    np.testing.assert_allclose(
+        w.edge_weight * len(samples), want_e, rtol=1e-12, atol=1e-9
+    )
