@@ -7,8 +7,6 @@ loads 1.2-2.5x.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import Row
 from repro.graph.datasets import make_dataset
 from repro.graph.sampling import NeighborSampler

@@ -17,8 +17,6 @@ not absolute seconds.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import (
     Row,
     model_load_seconds,

@@ -10,7 +10,7 @@ Supported models: GraphSAGE (mean), GAT (multi-head attention), GCN.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.transformer.config import ArchConfig
 from repro.models.transformer.layers import (

@@ -10,7 +10,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.transformer.blocks import block_apply, block_init
 from repro.models.transformer.config import ArchConfig

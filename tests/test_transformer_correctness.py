@@ -22,7 +22,6 @@ from repro.models.transformer.model import (
 )
 from repro.models.transformer.moe import moe_apply, moe_init
 from repro.models.transformer.ssm import (
-    _split_proj,
     ssm_apply_decode,
     ssm_apply_train,
     ssm_init,
