@@ -29,6 +29,16 @@ BENCHES = {
         "§3a — overlap/wire-format smoke gate",
         {"modes": ("split",), "dataset": "tiny", "rounds": 1, "smoke": True},
     ),
+    "mesh": ("benchmarks.mesh_bench", "§9 — 2D mesh scaling (R×P sweep)"),
+    # one tiny round over every R×P factorization with the mesh gates
+    # enforced: R=1 mesh bitwise == legacy 1D split, NaN-free everywhere,
+    # zero steady-state recompiles across swept shapes; same checks as
+    # `python -m benchmarks.mesh_bench --smoke`
+    "mesh_smoke": (
+        "benchmarks.mesh_bench",
+        "§9 — 2D mesh numerics/recompile smoke gate",
+        {"dataset": "tiny", "rounds": 1, "smoke": True},
+    ),
     # reduced fig5 run with the qualitative partitioner gates (gsplit < rand
     # cross edges, replication strictly reduces wire bytes) enforced; same
     # checks as `python -m benchmarks.fig5_partition_quality --smoke`

@@ -49,6 +49,7 @@ from repro.analysis.findings import Finding, dedupe
 #: static call resolver cannot follow — the roots named by the ISSUE.
 DEFAULT_ENTRIES: tuple[tuple[str, str], ...] = (
     ("src/repro/train/trainer.py", "Trainer._build_step"),
+    ("src/repro/train/trainer.py", "Trainer._build_mesh_step"),
     ("src/repro/models/gnn/layers.py", "gnn_forward"),
     ("src/repro/models/gnn/layers.py", "gnn_forward_cached"),
     ("src/repro/models/gnn/layers.py", "gnn_forward_spmd"),

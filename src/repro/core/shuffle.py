@@ -46,19 +46,27 @@ def wire_cast(send: jnp.ndarray, wire_dtype: str | None):
 
 
 def sim_alltoall(
-    send: jnp.ndarray, wire_dtype: str | None = None
+    send: jnp.ndarray, wire_dtype: str | None = None, axis: int = 0
 ) -> jnp.ndarray:
     """The fixed-size all-to-all primitive, sim mode.
 
     ``send[p, q, ...]`` is device ``p``'s equal-size block for peer ``q``;
     with every device resident in one program the exchange is a transpose of
-    the two leading axes. The single primitive behind the layer shuffles,
-    the cache remote fetch, and the cooperative sampler's frontier exchange
-    (``repro.sampler.engine``). ``wire_dtype`` down-casts float payloads for
-    the wire and restores the payload dtype on receipt (``wire_cast``).
+    the (owner, needer) axis pair at ``axis``. The single primitive behind
+    the layer shuffles, the cache remote fetch, and the cooperative
+    sampler's frontier exchange (``repro.sampler.engine``). ``wire_dtype``
+    down-casts float payloads for the wire and restores the payload dtype on
+    receipt (``wire_cast``).
+
+    ``axis`` names where the split axis lives: a replica-batched sim tensor
+    carries a leading replica axis R — ``send[r, p, q, ...]`` with
+    ``axis=1`` — and the transpose of axes (1, 2) never mixes rows across
+    the R axis, which is the sim statement of the 2D mesh's replica-group
+    locality invariant (DESIGN.md §9): each replica group runs its own
+    P-way exchange.
     """
     wire, restore = wire_cast(send, wire_dtype)
-    return jnp.swapaxes(wire, 0, 1).astype(restore)
+    return jnp.swapaxes(wire, axis, axis + 1).astype(restore)
 
 
 def spmd_alltoall(
@@ -69,6 +77,13 @@ def spmd_alltoall(
     ``send`` is (P, ...) — one equal-size block per peer; returns (P, ...)
     with ``recv[q]`` = peer ``q``'s block for this device (the spmd mirror
     of ``sim_alltoall``, including the wire-dtype contract).
+
+    ``axis_name`` is the *split* axis of the mesh. On a 2D
+    (replica, split) mesh, ``jax.lax.all_to_all`` over the split axis
+    exchanges only among the P devices that share this device's replica
+    coordinate — the exchange is confined to each replica group with no
+    extra code, which is the spmd statement of the replica-group locality
+    invariant (DESIGN.md §9).
     """
     wire, restore = wire_cast(send, wire_dtype)
     out = jax.lax.all_to_all(wire, axis_name, split_axis=0, concat_axis=0)
@@ -180,26 +195,41 @@ class SimComm:
     ``exchange`` returns the *recv region* — ``(P, P*S, Fc)`` here,
     ``(P*S, Fc)`` in spmd — which remote-half ``redge_src`` entries index
     directly (recv-relative coordinates, DESIGN.md §3a).
+
+    ``axis`` is the position of the split axis, mirroring ``SpmdComm``'s
+    explicit ``axis_name``: the default 0 is the classic 1D layout
+    (P leading); ``axis=1`` batches a leading replica axis R in front, and
+    every method then maps over (R, P) — gathers and appends are per-device
+    and the exchange transposes (owner, needer) *within* each replica
+    group, so no rows ever cross the R axis (DESIGN.md §9).
     """
 
+    def __init__(self, axis: int = 0):
+        if axis not in (0, 1):
+            raise ValueError(f"SimComm axis must be 0 or 1, got {axis}")
+        self.axis = axis
+
     def vmap(self, fn):
-        return jax.vmap(fn)
+        for _ in range(self.axis + 1):
+            fn = jax.vmap(fn)
+        return fn
 
     def send_gather(self, rows: jnp.ndarray, send_idx: jnp.ndarray):
-        # send[q, p, s, :] = rows[q, send_idx[q, p, s], :]
-        return jnp.take_along_axis(
-            rows[:, None, :, :], send_idx[:, :, :, None], axis=2
-        )
+        # send[..., q, p, s, :] = rows[..., q, send_idx[..., q, p, s], :]
+        # (per-owner gather, batched over the leading device axes)
+        return self.vmap(lambda r, idx: r[idx])(rows, send_idx)
 
     def exchange(self, send: jnp.ndarray, wire_dtype: str | None):
-        recv = sim_alltoall(send, wire_dtype)  # (P, P, S, Fc)
-        P = recv.shape[0]
-        return recv.reshape(P, -1, recv.shape[-1])
+        recv = sim_alltoall(send, wire_dtype, axis=self.axis)
+        lead = recv.shape[: self.axis + 1]  # (P,) or (R, P)
+        return recv.reshape(lead + (-1, recv.shape[-1]))
 
     def append_rows(self, rows: jnp.ndarray, extra: jnp.ndarray):
-        # broadcast-append a shared (R, Fc) block to (P, M, Fc) rows — the
-        # overlapped executor's hook for the replicated region
-        return sim_append_replicated(rows, extra)
+        # broadcast-append a shared (R_rows, Fc) block to per-device rows —
+        # the overlapped executor's hook for the replicated region
+        return self.vmap(
+            lambda m: jnp.concatenate([m, extra.astype(m.dtype)], axis=0)
+        )(rows)
 
 
 class SpmdComm:
@@ -225,6 +255,23 @@ class SpmdComm:
 
     def append_rows(self, rows: jnp.ndarray, extra: jnp.ndarray):
         return spmd_append_replicated(rows, extra)
+
+
+def replica_grad_mean(grads, axis_name: str, num_replicas: int):
+    """Average a gradient pytree across the replica mesh axis (spmd mode).
+
+    The single gradient-sync point of the 2D (replica, split) mesh
+    (DESIGN.md §9): after the split-local backward, every leaf is psum'd
+    over ``axis_name`` and divided by the static replica count. psum over a
+    mesh axis reduces in a fixed (ring-order) sequence, so the result is
+    the same bits as hand-summing the per-replica gradients in replica
+    order and dividing — ``tests/test_mesh.py`` pins exactly that. With
+    ``num_replicas == 1`` the psum is an identity and the division is by
+    1.0 (IEEE-exact), so the degenerate mesh reproduces the 1D step.
+    """
+    return jax.tree_util.tree_map(
+        lambda g: jax.lax.psum(g, axis_name) / num_replicas, grads
+    )
 
 
 def _scatter_add_rows(

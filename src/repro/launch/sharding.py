@@ -147,18 +147,69 @@ def cache_specs(cfg: ArchConfig, cache_shapes, mesh) -> dict:
     return jax.tree_util.tree_map_with_path(build, cache_shapes)
 
 
-def split_cache_specs(cache_arrays) -> dict:
+def make_split_mesh(
+    num_replicas: int = 1,
+    num_splits: int = 1,
+    *,
+    replica_axis: str = "replica",
+    split_axis: str = "split",
+    devices=None,
+):
+    """The 2D (replica, split) device mesh for hybrid split parallelism.
+
+    Axis order is (R, P) with the split axis *minor*: on hardware whose
+    device order follows interconnect locality (a TPU slice, one NVLink
+    island per host), the P devices of one replica group are then physically
+    adjacent, so the high-traffic channels — layer shuffles, cache remote
+    fetch, sampler frontier exchange, all confined to ``split_axis`` —
+    stay on the fast intra-group links while only the once-per-step
+    gradient psum crosses the ``replica_axis`` (DESIGN.md §9). ``R == 1``
+    degenerates to the 1D split mesh (the equivalence tests' anchor).
+    """
+    if num_replicas < 1 or num_splits < 1:
+        raise ValueError(
+            f"mesh axes must be >= 1, got R={num_replicas} P={num_splits}"
+        )
+    kwargs = {} if devices is None else {"devices": devices}
+    return jax.make_mesh(
+        (num_replicas, num_splits), (replica_axis, split_axis), **kwargs
+    )
+
+
+def mesh_plan_specs(plan_arrays, replica_axis: str = "replica",
+                    split_axis: str = "split") -> dict:
+    """Per-replica-stacked plan arrays: shard leading (R, P) over the mesh.
+
+    On the 2D mesh every plan/feature/label array carries a leading replica
+    axis on top of the usual device axis — ``(R, P, ...)`` — built by
+    stacking the R per-replica plans (each repadded to the shared
+    high-water marks so the stack is rectangular). Sharding both leading
+    axes gives each device exactly its replica's per-split slice, which is
+    what the shard_map bodies consume.
+    """
+    return jax.tree_util.tree_map(
+        lambda leaf: P(
+            *((replica_axis, split_axis) + (None,) * (leaf.ndim - 2))
+        ),
+        plan_arrays,
+    )
+
+
+def split_cache_specs(cache_arrays, split_axis: str = "model") -> dict:
     """GNN split-parallel cache serving: shard on the leading device axis.
 
     The (P, C, F) resident feature-cache block and every ``CachePlan`` array
     carry the split/device dimension first (`owner` for ``send_slot``,
     `needer` for ``recv_pos``/``recv_mask``, the device itself for the
-    rest), so under SPMD they all shard over the mesh's ``model`` axis on
+    rest), so under SPMD they all shard over the mesh's split axis on
     axis 0 and the per-shard slices are exactly what
-    ``core.shuffle.spmd_serve_features`` consumes.
+    ``core.shuffle.spmd_serve_features`` consumes. ``split_axis`` defaults
+    to the 1D launcher's ``"model"`` axis; pass ``"split"`` on the 2D
+    ``make_split_mesh`` (the resident block is identical across replica
+    groups, so the replica axis never appears in these specs).
     """
     return jax.tree_util.tree_map(
-        lambda leaf: P(*(("model",) + (None,) * (leaf.ndim - 1))),
+        lambda leaf: P(*((split_axis,) + (None,) * (leaf.ndim - 1))),
         cache_arrays,
     )
 
@@ -171,30 +222,34 @@ def replicated_block_specs(rep_arrays) -> dict:
     that is the whole point: replicated-src edges aggregate locally with
     zero wire bytes. Under SPMD the block therefore carries an all-``None``
     PartitionSpec, mirroring the ``owner``/``local_row`` maps in
-    ``sampler_shard_specs``.
+    ``sampler_shard_specs`` — and on the 2D mesh the same all-``None``
+    spec replicates it across both axes, no change needed.
     """
     return jax.tree_util.tree_map(
         lambda leaf: P(*((None,) * leaf.ndim)), rep_arrays
     )
 
 
-def sampler_shard_specs(dev_arrays: dict) -> dict:
+def sampler_shard_specs(dev_arrays: dict, split_axis: str = "model") -> dict:
     """Device CSR shard sharding for SPMD cooperative sampling.
 
     The per-partition CSR blocks (``indptr``/``indices``/``edge_id``,
-    leading axis P) and ``num_local`` shard over the mesh's ``model`` axis so
+    leading axis P) and ``num_local`` shard over the mesh's split axis so
     each device holds only its own partition's adjacency; the O(V) ownership
     maps (``owner``/``local_row``) are replicated — every split must route
     any discovered vertex to its owner in O(1)
     (``repro.sampler.engine.sample_minibatch_spmd`` consumes the per-shard
-    slices).
+    slices). ``split_axis`` defaults to the 1D launcher's ``"model"``
+    axis; pass ``"split"`` on the 2D mesh — the CSR shards are the same
+    for every replica group (one partition of one graph), so they too are
+    replica-axis free.
     """
     replicated = ("owner", "local_row")
     return {
         k: (
             P(*((None,) * v.ndim))
             if k in replicated
-            else P(*(("model",) + (None,) * (v.ndim - 1)))
+            else P(*((split_axis,) + (None,) * (v.ndim - 1)))
         )
         for k, v in dev_arrays.items()
     }

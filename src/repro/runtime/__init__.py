@@ -9,6 +9,7 @@ for compiled-executable reuse tracking.
 from repro.runtime.plan_source import (
     DevicePipelinedPlanSource,
     DevicePlanSource,
+    MeshPlanBatch,
     PipelinedPlanSource,
     PlanBatch,
     PlanProducer,
@@ -18,11 +19,16 @@ from repro.runtime.plan_source import (
 )
 from repro.runtime.prefetch import OrderedPrefetcher, PrefetchStats
 from repro.runtime.recompile import RecompileEvent, RecompileTracer
-from repro.runtime.signature import SignatureCache, plan_signature
+from repro.runtime.signature import (
+    SignatureCache,
+    mesh_signature,
+    plan_signature,
+)
 
 __all__ = [
     "DevicePipelinedPlanSource",
     "DevicePlanSource",
+    "MeshPlanBatch",
     "OrderedPrefetcher",
     "PrefetchStats",
     "PipelinedPlanSource",
@@ -34,5 +40,6 @@ __all__ = [
     "SerialPlanSource",
     "SignatureCache",
     "make_plan_source",
+    "mesh_signature",
     "plan_signature",
 ]

@@ -46,7 +46,7 @@ from repro.core.splitting import (
 from repro.graph.cache import CachePlan, FeatureCache, LoadBreakdown
 from repro.graph.sampling import NeighborSampler
 from repro.runtime.prefetch import OrderedPrefetcher
-from repro.runtime.signature import SignatureCache, plan_signature
+from repro.runtime.signature import SignatureCache, mesh_signature, plan_signature
 
 # NOTE: repro.train.plan_io is imported lazily inside PlanProducer.build —
 # repro.train's package __init__ imports the trainer, which imports this
@@ -75,6 +75,31 @@ class PlanBatch:
     sig_hit: bool = False
 
 
+@dataclass
+class MeshPlanBatch:
+    """One global mini-batch fanned out across the replica axis.
+
+    ``parts[r]`` is replica ``r``'s fully-staged ``PlanBatch`` (its own
+    sampled subgraph, split plan, feature/label blocks) over the same P-way
+    partition; the mesh step consumes all R parts in one jitted call and
+    averages the gradients across the replica axis (DESIGN.md §9). Stage
+    timings are summed over parts — the host cost of one global batch.
+    """
+
+    index: int
+    epoch: int
+    parts: list  # R PlanBatch, replica order
+    t_sample: float = 0.0
+    t_split: float = 0.0
+    t_load: float = 0.0
+    signature: tuple = ()
+    sig_hit: bool = False
+
+    @property
+    def num_replicas(self) -> int:
+        return len(self.parts)
+
+
 class PlanProducer:
     """Builds one ``PlanBatch``: sample -> online split -> feature load.
 
@@ -100,6 +125,7 @@ class PlanProducer:
         with_halves: bool = False,  # build the §3a local/remote edge halves
         replication=None,  # core.partition.ReplicationSet | None
         telemetry=None,  # core.partition.EdgeTelemetry | None
+        num_replicas: int = 0,  # 0 = 1D path; >=1 = (R, P) mesh fan-out
     ):
         if mode not in ("split", "dp", "pushpull"):
             raise ValueError(f"unknown mode {mode!r}")
@@ -107,6 +133,10 @@ class PlanProducer:
             raise ValueError("split mode needs a partition assignment")
         if device_sampler is not None and mode != "split":
             raise ValueError("device sampling is split-mode only")
+        if num_replicas < 0:
+            raise ValueError(f"num_replicas must be >= 0, got {num_replicas}")
+        if num_replicas >= 1 and mode != "split":
+            raise ValueError("the (R, P) mesh composes with mode='split' only")
         self.sampler = sampler
         self.features = features
         self.labels = labels
@@ -124,10 +154,13 @@ class PlanProducer:
         # epochs; EdgeTelemetry.record is thread-safe for pipelined producers
         self.replication = replication
         self.telemetry = telemetry
+        self.num_replicas = num_replicas
 
-    def build(self, epoch: int, index: int, targets: np.ndarray) -> PlanBatch:
+    def build(self, epoch: int, index: int, targets: np.ndarray):
         from repro.train.plan_io import load_labels, stage_host_features
 
+        if self.num_replicas >= 1:
+            return self._build_mesh(epoch, index, targets)
         t0 = time.perf_counter()
         if self.mode in ("dp", "pushpull"):
             samples = self.sampler.sample_micro_batch(
@@ -177,6 +210,95 @@ class PlanProducer:
             cache_plan=cache_plan,
         )
 
+    def _sample_replicas(self, epoch: int, index: int, targets: np.ndarray):
+        """The R per-replica samples for one global batch, in replica order.
+
+        R == 1 uses the *unsuffixed* batch key — the exact draw the 1D
+        producer makes — so the degenerate mesh is bit-identical to the 1D
+        path. R > 1 keys host draws like ``sample_micro_batch`` (chunk r
+        gets ``(0x5A3, epoch, index, r)``), which makes an R×1 mesh sample
+        exactly the micro-batches a ``dp`` run over R devices would; the
+        device engine folds ``(replica, R)`` into its flattened batch
+        counter instead (see ``DeviceSampler.sample_batch``).
+        """
+        R = self.num_replicas
+        if R == 1:
+            if self.device_sampler is not None:
+                return [self.device_sampler.sample_batch(targets, epoch, index)]
+            return [self.sampler.sample_batch(targets, epoch, index)]
+        if self.device_sampler is not None:
+            chunks = np.array_split(targets, R)
+            return [
+                self.device_sampler.sample_batch(
+                    chunk, epoch, index, replica=r, num_replicas=R
+                )
+                for r, chunk in enumerate(chunks)
+            ]
+        return self.sampler.sample_micro_batch(targets, R, epoch, index)
+
+    def _build_mesh(
+        self, epoch: int, index: int, targets: np.ndarray
+    ) -> MeshPlanBatch:
+        """Fan one global batch out across the replica axis (mesh mode).
+
+        Each replica's chunk of ``targets`` is sampled independently (keyed
+        RNG — see ``_sample_replicas``) and goes through the same online
+        split -> feature load stages as the 1D path, over the *same* P-way
+        partition/cache/replication tables (shared read-only state: the
+        graph is partitioned once, every replica group maps vertex -> split
+        identically). High-water-mark repadding stays on the delivery side
+        (``_finalize``), which also makes the R parts rectangular.
+        """
+        from repro.train.plan_io import load_labels, stage_host_features
+
+        t0 = time.perf_counter()
+        samples = self._sample_replicas(epoch, index, targets)
+        t_sample = time.perf_counter() - t0
+        parts, t_split, t_load = [], 0.0, 0.0
+        for sample in samples:
+            t1 = time.perf_counter()
+            if self.telemetry is not None:
+                self.telemetry.record(sample)
+            plan = build_split_plan(
+                sample,
+                self.assignment,
+                self.num_devices,
+                pad_multiple=self.pad_multiple,
+                with_halves=self.with_halves,
+                replication=self.replication,
+            )
+            t2 = time.perf_counter()
+            cache_plan, feats, breakdown = stage_host_features(
+                plan, self.features, self.cache, self.serve_cache,
+                self.pad_multiple,
+            )
+            labels = load_labels(plan, self.labels)
+            t3 = time.perf_counter()
+            t_split += t2 - t1
+            t_load += t3 - t2
+            parts.append(
+                PlanBatch(
+                    index=index,
+                    epoch=epoch,
+                    plan=plan,
+                    feats=feats,
+                    labels=labels,
+                    breakdown=breakdown,
+                    t_sample=0.0,
+                    t_split=t2 - t1,
+                    t_load=t3 - t2,
+                    cache_plan=cache_plan,
+                )
+            )
+        return MeshPlanBatch(
+            index=index,
+            epoch=epoch,
+            parts=parts,
+            t_sample=t_sample,
+            t_split=t_split,
+            t_load=t_load,
+        )
+
 
 def finalize_cache_plan(cp: CachePlan, hwm: dict, n_l: int) -> CachePlan:
     """Grow a cache plan to the running high-water marks (``CM``/``CS``).
@@ -190,6 +312,54 @@ def finalize_cache_plan(cp: CachePlan, hwm: dict, n_l: int) -> CachePlan:
     return cp.pad_to(n_l, hwm["CM"], hwm["CS"])
 
 
+def _finalize_mesh(
+    batch: MeshPlanBatch,
+    hwm: dict,
+    sig_cache: SignatureCache | None,
+    sig_extra: tuple = (),
+) -> MeshPlanBatch:
+    """Delivery-side finalize for a mesh batch: two repad passes over the R
+    parts against the *shared* high-water marks.
+
+    Pass 1 absorbs every part's widths into ``hwm`` (replica order — the
+    same order-sensitivity contract as the 1D path, which is why this runs
+    on the ordered side of the queue); pass 2 repads each part against the
+    settled marks, so all R parts leave with identical padded shapes —
+    rectangular across the replica axis, ready to stack for spmd. Repadding
+    only ever grows to the marks (``pad_axis`` is a no-op at width), so the
+    second pass is idempotent; with R == 1 it is a literal no-op and the
+    part is processed exactly like the 1D ``_finalize``. One mesh signature
+    (keyed on the mesh shape, ``mesh_signature``) is recorded per delivery
+    — the mesh step is one executable, so one cache entry is the honest
+    unit.
+    """
+    t0 = time.perf_counter()
+    for _ in range(2):
+        for part in batch.parts:
+            repad_plan(part.plan, hwm)
+            if part.cache_plan is not None:
+                finalize_cache_plan(
+                    part.cache_plan, hwm, part.plan.front_ids[-1].shape[1]
+                )
+    for part in batch.parts:
+        if part.cache_plan is not None:
+            part.feats = pad_axis(part.feats, 1, hwm["CM"])
+        else:
+            part.feats = pad_axis(
+                part.feats, 1, part.plan.front_ids[-1].shape[1]
+            )
+        part.labels = pad_axis(
+            part.labels, 1, part.plan.front_ids[0].shape[1]
+        )
+    batch.t_split += time.perf_counter() - t0
+    batch.signature = mesh_signature(
+        [(p.plan, p.cache_plan) for p in batch.parts], sig_extra
+    )
+    if sig_cache is not None:
+        batch.sig_hit = sig_cache.record(batch.signature)
+    return batch
+
+
 def _finalize(
     batch: PlanBatch,
     hwm: dict,
@@ -201,8 +371,11 @@ def _finalize(
 
     The cache plan is repadded here too (keys ``CM``/``CS``): its arrays are
     purely position-based, so growing them only appends masked entries —
-    unlike ``edge_src``, nothing needs rebasing.
+    unlike ``edge_src``, nothing needs rebasing. Mesh batches take the
+    two-pass variant above.
     """
+    if isinstance(batch, MeshPlanBatch):
+        return _finalize_mesh(batch, hwm, sig_cache, sig_extra)
     t0 = time.perf_counter()
     repad_plan(batch.plan, hwm)
     if batch.cache_plan is not None:

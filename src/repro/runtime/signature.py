@@ -63,6 +63,28 @@ def plan_signature(plan: SplitPlan, cache_plan=None, extra: tuple = ()) -> tuple
     return (plan.num_devices, plan.num_layers, fronts, layers, cache, extra)
 
 
+def mesh_signature(parts, extra: tuple = ()) -> tuple:
+    """The padded-shape key of a mesh step: one signature per mesh shape.
+
+    ``parts`` is the R (plan, cache_plan) pairs of one ``MeshPlanBatch`` in
+    replica order. The key leads with a ``"mesh"`` tag plus the mesh shape
+    — R here, P inside every per-part ``plan_signature`` — so two runs
+    that differ only in mesh factorization (R×P vs R'×P' of the same chip
+    count) can never share a compiled executable, and the R=1 mesh key is
+    distinct from the 1D key of the same plan (different jitted callable,
+    different cache). Per-part signatures are kept verbatim rather than
+    collapsed: after warmup all parts converge to the shared high-water
+    marks, so the steady-state signature count stays O(1) per mesh shape
+    (the zero-recompile contract, tests/test_mesh.py).
+    """
+    return (
+        "mesh",
+        len(parts),
+        tuple(plan_signature(plan, cp) for plan, cp in parts),
+        extra,
+    )
+
+
 class SignatureCache:
     """Counts compiled-signature reuse across delivered plans."""
 

@@ -191,6 +191,11 @@ def sample_minibatch_spmd(
     Identical math to ``_sample_device`` — the vmapped steps run unbatched
     on this shard's frontier and the exchange is ``jax.lax.all_to_all``
     (send counts ride their own all-to-all to mask the receive side).
+    ``axis_name`` is the mesh's *split* axis: on the 2D (replica, split)
+    mesh of ``launch.sharding.make_split_mesh`` the frontier exchange and
+    ``axis_index`` resolve within this device's replica group only, so R
+    replica groups cooperatively sample R independent mini-batches from one
+    program (``num_parts`` stays P, the split-axis size — never R*P).
     Returns this shard's ``(fronts, counts, layers, flags)``; the flags are
     this shard's overflow indicators per capacity key — callers must
     ``jnp.any`` them across shards (or check each shard's) and discard the
@@ -359,14 +364,32 @@ class DeviceSampler:
         )
 
     def sample_batch(
-        self, targets: np.ndarray, epoch: int, batch: int
+        self,
+        targets: np.ndarray,
+        epoch: int,
+        batch: int,
+        replica: int = 0,
+        num_replicas: int = 1,
     ) -> MiniBatchSample:
         """Sample one mini-batch on device, keyed by ``(seed, epoch, batch)``.
 
         On capacity overflow the batch is re-sampled by the host sampler's
         keyed API (identical call the pure-host producer would make) and the
         flagged caps are scheduled to double at the next ``refresh_caps``.
+
+        On the 2D mesh each replica group samples its own chunk of the
+        global batch: ``(replica, num_replicas)`` fold into the draw keys
+        via the flattened batch counter ``batch * num_replicas + replica``,
+        so the R per-replica streams are disjoint but each remains a pure
+        function of static integers (the keyed-RNG discipline, DESIGN.md
+        §6). The defaults ``(0, 1)`` leave the key exactly as before — the
+        1D path is byte-identical.
         """
+        if not (0 <= replica < max(num_replicas, 1)):
+            raise ValueError(
+                f"replica {replica} out of range for R={num_replicas}"
+            )
+        key_batch = batch * max(num_replicas, 1) + replica
         targets = np.asarray(targets, dtype=np.int64)
         caps = self.caps_tuple()
         B = pow2_at_least(max(targets.shape[0], 1), floor=16)
@@ -376,7 +399,7 @@ class DeviceSampler:
             self._dev,
             jnp.asarray(tpad),
             jnp.int32(targets.shape[0]),
-            jnp.asarray(self.layer_keys(epoch, batch)),
+            jnp.asarray(self.layer_keys(epoch, key_batch)),
             caps=caps,
             fanouts=self.fanouts,
             backend=self.backend,
@@ -396,7 +419,7 @@ class DeviceSampler:
                         self._pending.get(k, 0), 2 * dict(caps)[k]
                     )
         if overflowed:
-            return self.host.sample_batch(targets, epoch, batch)
+            return self.host.sample_batch(targets, epoch, key_batch)
         return self._assemble(targets, fronts, counts, layers)
 
     def _assemble(self, targets, fronts, counts, layers) -> MiniBatchSample:

@@ -37,7 +37,13 @@ from repro.graph.datasets import GraphDataset
 from repro.graph.sampling import NeighborSampler
 from repro.models.gnn import GNNSpec, init_gnn_params
 from repro.models.gnn.layers import gnn_forward, gnn_forward_cached
-from repro.runtime import PlanBatch, PlanProducer, SignatureCache, make_plan_source
+from repro.runtime import (
+    MeshPlanBatch,
+    PlanBatch,
+    PlanProducer,
+    SignatureCache,
+    make_plan_source,
+)
 from repro.runtime.plan_source import finalize_cache_plan
 from repro.train import optimizer as opt_lib
 from repro.train.loss import masked_softmax_xent, masked_accuracy
@@ -99,6 +105,14 @@ class TrainConfig:
     # per-epoch counts land in ``EpochStats.recompiles``. Steady state at
     # fixed caps must be zero — tests/test_runtime.py regresses this.
     trace_recompiles: bool = False
+    # 2D (replica, split) mesh (DESIGN.md §9): 0 = the classic 1D P-way
+    # split path (default); R >= 1 runs R replica groups of ``num_devices``
+    # splits each — every global batch fans out into R independently
+    # sampled per-replica plans over the *same* partition, the jitted mesh
+    # step runs R split-local forward/backwards and averages gradients
+    # across the replica axis. R = 1 is the degenerate mesh, pinned
+    # bit-identical to the 1D path by tests/test_mesh.py. Split mode only.
+    num_replicas: int = 0
     seed: int = 0
 
 
@@ -219,6 +233,13 @@ class Trainer:
             )
         if cfg.shuffle_chunks < 1:
             raise ValueError("shuffle_chunks must be >= 1")
+        if cfg.num_replicas < 0:
+            raise ValueError("num_replicas must be >= 0 (0 = 1D split path)")
+        if cfg.num_replicas >= 1 and cfg.mode != "split":
+            raise ValueError(
+                "the (R, P) mesh composes with mode='split' only — dp and "
+                "pushpull are already replica-style baselines"
+            )
         self.ds = dataset
         # the config's execution-schedule knobs are authoritative: the spec
         # the caller hands in describes the model, the TrainConfig describes
@@ -308,6 +329,11 @@ class Trainer:
         self.opt = opt_factory(cfg.lr)
         self.opt_state = self.opt.init(self.params)
         self._step_fn, self._cached_step_fn = self._build_step()
+        self._mesh_step_fn = self._mesh_cached_step_fn = None
+        if cfg.num_replicas >= 1:
+            self._mesh_step_fn, self._mesh_cached_step_fn = (
+                self._build_mesh_step()
+            )
         self._pad_hwm: dict = {}  # high-water-mark padding (stable jit sigs)
         self._epoch = 0  # epochs consumed via train_epoch (keyed RNG input)
         self.sig_cache = SignatureCache()
@@ -334,6 +360,11 @@ class Trainer:
             self.recompiles = RecompileTracer()
             self.recompiles.register("step", self._step_fn)
             self.recompiles.register("cached_step", self._cached_step_fn)
+            if self._mesh_step_fn is not None:
+                self.recompiles.register("mesh_step", self._mesh_step_fn)
+                self.recompiles.register(
+                    "mesh_cached_step", self._mesh_cached_step_fn
+                )
             if self.device_sampler is not None:
                 from repro.sampler.engine import _sample_device
 
@@ -352,6 +383,7 @@ class Trainer:
             with_halves=cfg.shuffle_overlap,
             replication=self.replication,
             telemetry=self.telemetry,
+            num_replicas=cfg.num_replicas,
         )
 
     # ------------------------------------------------------------------ #
@@ -397,6 +429,67 @@ class Trainer:
         )
         return step, cached_step
 
+    def _build_mesh_step(self):
+        """The 2D (replica, split) step: R split-local forward/backwards in
+        one jitted call, gradients averaged across the replica axis.
+
+        ``replicas`` is a tuple of R ``(inputs, plan_arrays, labels)``
+        triples — one per replica group, each carrying its own leading-P
+        plan pytree (R is static program structure via the tuple length, so
+        the signature cache keys on the mesh shape). The replica loop is
+        *unrolled in Python* rather than vmapped: each iteration traces the
+        exact jaxpr of the 1D step's loss/grad, which makes the R = 1 mesh
+        bit-identical to the 1D path (the trailing sum-of-one-term and
+        divide-by-1.0 are IEEE-exact) — the anchor of the equivalence
+        matrix in tests/test_mesh.py. The fixed left-to-right reduction
+        over replicas is the sim statement of the spmd psum's ring order
+        (``core.shuffle.replica_grad_mean``). The loss/accuracy reported
+        are the means of the per-replica masked means.
+        """
+        spec, opt = self.spec, self.opt
+
+        def make_step(forward_fn):
+            def loss_fn(params, inputs, plan_arrays, labels):
+                logits = forward_fn(params, inputs, plan_arrays)
+                mask = plan_arrays["target_mask"]
+                loss = masked_softmax_xent(logits, labels, mask)
+                acc = masked_accuracy(logits, labels, mask)
+                return loss, acc
+
+            @jax.jit
+            def mesh_step(params, opt_state, replicas):
+                grads = loss_sum = acc_sum = None
+                for inputs, plan_arrays, labels in replicas:
+                    (loss, acc), g = jax.value_and_grad(
+                        loss_fn, has_aux=True
+                    )(params, inputs, plan_arrays, labels)
+                    grads = (
+                        g
+                        if grads is None
+                        else jax.tree_util.tree_map(jnp.add, grads, g)
+                    )
+                    loss_sum = loss if loss_sum is None else loss_sum + loss
+                    acc_sum = acc if acc_sum is None else acc_sum + acc
+                num = len(replicas)
+                grads = jax.tree_util.tree_map(lambda t: t / num, grads)
+                params, opt_state = opt.update(grads, opt_state, params)
+                return params, opt_state, loss_sum / num, acc_sum / num
+
+            return mesh_step
+
+        mesh_step = make_step(
+            lambda params, feats, pa: gnn_forward(
+                spec, params, feats, pa, sim_shuffle, rep_block=pa.get("rep")
+            )
+        )
+        mesh_cached_step = make_step(
+            lambda params, inputs, pa: gnn_forward_cached(
+                spec, params, inputs[0], inputs[1], pa, sim_shuffle,
+                rep_block=pa.get("rep"),
+            )
+        )
+        return mesh_step, mesh_cached_step
+
     def _num_replicated(self) -> int:
         return self.replication.num_replicated if self.replication else 0
 
@@ -431,7 +524,103 @@ class Trainer:
         t2 = time.perf_counter()
         return plan, t1 - t0, t2 - t1
 
+    def _mesh_plan_for(self, targets: np.ndarray):
+        """Inline-path mesh fan-out: R streamed samples -> R repadded plans.
+
+        Mirrors ``_plan_for`` on the streamed (call-order) RNG: replica
+        chunks consume the shared generator sequentially, exactly like
+        ``sample_micro`` does for dp. Two repad passes against the shared
+        high-water marks leave the R plans rectangular (same discipline as
+        the delivery-side ``_finalize_mesh``); with R == 1 the second pass
+        is a no-op and this is ``_plan_for`` verbatim.
+        """
+        cfg = self.cfg
+        R = cfg.num_replicas
+        t0 = time.perf_counter()
+        chunks = [targets] if R == 1 else np.array_split(targets, R)
+        samples = [self.sampler.sample(c) for c in chunks]
+        t1 = time.perf_counter()
+        plans = [
+            build_split_plan(
+                s,
+                self.partition.assignment,
+                cfg.num_devices,
+                pad_multiple=cfg.pad_multiple,
+                with_halves=cfg.shuffle_overlap,
+                replication=self.replication,
+            )
+            for s in samples
+        ]
+        for _ in range(2):
+            for plan in plans:
+                repad_plan(plan, self._pad_hwm)
+        t2 = time.perf_counter()
+        return plans, t1 - t0, t2 - t1
+
+    def _train_iter_mesh(self, targets: np.ndarray) -> IterStats:
+        plans, t_sample, t_split = self._mesh_plan_for(targets)
+
+        t0 = time.perf_counter()
+        staged = []  # [plan, cache_plan, feats, labels, breakdown]
+        for plan in plans:
+            cache_plan, feats, breakdown = stage_host_features(
+                plan, self.ds.features, self.cache,
+                serve_cache=self.cache_block is not None,
+                pad_multiple=self.cfg.pad_multiple,
+            )
+            labels = load_labels(plan, self.ds.labels)
+            staged.append([plan, cache_plan, feats, labels, breakdown])
+        # cache widths follow the shared CM/CS marks, settled over all R
+        # parts before any feature block is padded (two-pass, like plans)
+        for _ in range(2):
+            for plan, cache_plan, *_ in staged:
+                if cache_plan is not None:
+                    finalize_cache_plan(
+                        cache_plan, self._pad_hwm, plan.front_ids[-1].shape[1]
+                    )
+        for entry in staged:
+            if entry[1] is not None:
+                entry[2] = pad_axis(entry[2], 1, self._pad_hwm["CM"])
+        t_load = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        cached = staged[0][1] is not None
+        replicas = []
+        for plan, cache_plan, feats, labels, _ in staged:
+            plan_arrays = self._attach_rep(
+                plan_to_device(
+                    plan, cache_plan, with_halves=self.cfg.shuffle_overlap,
+                    num_replicated=self._num_replicated(),
+                )
+            )
+            inputs = (
+                (self.cache_block, jnp.asarray(feats))
+                if cached
+                else jnp.asarray(feats)
+            )
+            replicas.append((inputs, plan_arrays, jnp.asarray(labels)))
+        fn = self._mesh_cached_step_fn if cached else self._mesh_step_fn
+        self.params, self.opt_state, loss, acc = fn(
+            self.params, self.opt_state, tuple(replicas)
+        )
+        if self.recompiles is not None:
+            self.recompiles.step("train_iter")
+        loss, acc = jax.device_get((loss, acc))
+        t_compute = time.perf_counter() - t0
+        return self._mesh_iter_stats(
+            plans,
+            [entry[4] for entry in staged],
+            float(loss),
+            float(acc),
+            t_sample,
+            t_split,
+            t_load,
+            t_compute,
+        )
+
     def train_iter(self, targets: np.ndarray) -> IterStats:
+        if self.cfg.num_replicas >= 1:
+            return self._train_iter_mesh(targets)
         plan, t_sample, t_split = self._plan_for(targets)
 
         t0 = time.perf_counter()
@@ -515,9 +704,36 @@ class Trainer:
             ),
         )
 
+    def _step_mesh_batch(self, batch: MeshPlanBatch):
+        """Stage all R parts of a mesh batch and dispatch the mesh step.
+
+        Each part stages exactly like a 1D batch (same ``stage_batch``,
+        same replicated-block attachment — the resident block is one
+        object shared by every replica's plan pytree, no copies); the
+        jitted mesh step consumes the R triples in replica order.
+        """
+        cached = batch.parts[0].cache_plan is not None
+        replicas = []
+        for part in batch.parts:
+            feats_d, plan_arrays, labels_d = stage_batch(
+                part.plan, part.feats, part.labels, part.cache_plan,
+                with_halves=self.cfg.shuffle_overlap,
+                num_replicated=self._num_replicated(),
+            )
+            plan_arrays = self._attach_rep(plan_arrays)
+            inputs = (self.cache_block, feats_d) if cached else feats_d
+            replicas.append((inputs, plan_arrays, labels_d))
+        fn = self._mesh_cached_step_fn if cached else self._mesh_step_fn
+        self.params, self.opt_state, loss, acc = fn(
+            self.params, self.opt_state, tuple(replicas)
+        )
+        return loss, acc
+
     def _step_batch(self, batch: PlanBatch):
         """Stage a finalized batch to device and dispatch the jitted step.
         Returns the (still-async) loss/accuracy device values."""
+        if isinstance(batch, MeshPlanBatch):
+            return self._step_mesh_batch(batch)
         feats_d, plan_arrays, labels_d = stage_batch(
             batch.plan, batch.feats, batch.labels, batch.cache_plan,
             with_halves=self.cfg.shuffle_overlap,
@@ -535,7 +751,63 @@ class Trainer:
             )
         return loss, acc
 
+    def _mesh_iter_stats(
+        self, plans, breakdowns, loss, acc, t_sample, t_split, t_load,
+        t_compute,
+    ) -> IterStats:
+        """Aggregate R per-replica plans into one global-batch IterStats.
+
+        Work counters (loaded rows, edges, shuffle rows, wire bytes, padded
+        slots) sum — they are real total work for the global batch; the
+        balance ratios average; ``busiest_edges`` takes the max — all R*P
+        devices run concurrently, so the busiest device anywhere is the
+        step's compute critical path.
+        """
+        breakdown = None
+        if breakdowns and all(b is not None for b in breakdowns):
+            breakdown = LoadBreakdown(
+                local_hit=sum(b.local_hit for b in breakdowns),
+                remote_hit=sum(b.remote_hit for b in breakdowns),
+                host_miss=sum(b.host_miss for b in breakdowns),
+            )
+        return IterStats(
+            loss=float(loss),
+            accuracy=float(acc),
+            t_sample=t_sample,
+            t_split=t_split,
+            t_load=t_load,
+            t_compute=t_compute,
+            loaded_rows=sum(p.loaded_feature_rows() for p in plans),
+            computed_edges=sum(p.computed_edges() for p in plans),
+            shuffle_rows=sum(p.shuffle_rows() for p in plans),
+            padded_edge_slots=sum(p.padded_edge_slots() for p in plans),
+            busiest_edges=max(p.busiest_edges() for p in plans),
+            load_breakdown=breakdown,
+            load_imbalance=float(
+                np.mean([p.load_imbalance() for p in plans])
+            ),
+            cross_edge_fraction=float(
+                np.mean([p.cross_edge_fraction() for p in plans])
+            ),
+            wire_bytes=sum(
+                modeled_wire_bytes(p, self.spec, self.cfg.wire_dtype)
+                for p in plans
+            ),
+        )
+
     def _iter_stats(self, batch: PlanBatch, loss, acc, t0: float) -> IterStats:
+        if isinstance(batch, MeshPlanBatch):
+            loss, acc = jax.device_get((loss, acc))
+            return self._mesh_iter_stats(
+                [p.plan for p in batch.parts],
+                [p.breakdown for p in batch.parts],
+                float(loss),
+                float(acc),
+                batch.t_sample,
+                batch.t_split,
+                batch.t_load,
+                time.perf_counter() - t0,
+            )
         plan = batch.plan
         # one transfer fetches both scalars and blocks until the step's
         # results are ready — the epoch loop's single designed sync point
