@@ -65,11 +65,13 @@ def _factorizations(chips: int) -> list[tuple[int, int]]:
     return [(r, chips // r) for r in range(1, chips + 1) if chips % r == 0]
 
 
-def _trainer(ds, spec, replicas, splits, batch, scale) -> Trainer:
+def _trainer(ds, spec, replicas, splits, batch, scale,
+             obs_path=None) -> Trainer:
     cfg = TrainConfig(
         mode="split", num_devices=splits, num_replicas=replicas,
         fanouts=scale["fanouts"], batch_size=batch, presample_epochs=2,
         seed=0, plan_source="serial", trace_recompiles=True,
+        obs_trace=obs_path is not None, obs_path=obs_path,
     )
     return Trainer(ds, spec, cfg)
 
@@ -83,7 +85,7 @@ def _legacy_trainer(ds, spec, splits, batch, scale) -> Trainer:
 
 
 def run(chips=CHIPS, dataset="orkut-s", rounds=ROUNDS, smoke=False,
-        strict_time=False) -> list[Row]:
+        strict_time=False, obs_dir=None) -> list[Row]:
     ds = make_dataset(dataset)
     scale = SMOKE_SCALE if smoke else SCALE
     spec = GNNSpec(
@@ -101,7 +103,13 @@ def run(chips=CHIPS, dataset="orkut-s", rounds=ROUNDS, smoke=False,
             if (r, p) not in arms:
                 # cfg.batch_size is the *global* batch on the mesh path: each
                 # step splits it into R per-replica micro-batches
-                arms[(r, p)] = _trainer(ds, spec, r, p, gb, scale)
+                obs_path = (
+                    f"{obs_dir}/mesh_{dataset}_R{r}xP{p}.json"
+                    if obs_dir else None
+                )
+                arms[(r, p)] = _trainer(
+                    ds, spec, r, p, gb, scale, obs_path=obs_path
+                )
 
     warm = {shape: tr.train_epoch() for shape, tr in arms.items()}
     for tr in arms.values():
@@ -198,13 +206,22 @@ def main() -> None:
     ap.add_argument("--dataset", default=None)
     ap.add_argument("--chips", nargs="+", type=int, default=None)
     ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--obs-trace", metavar="DIR", default=None,
+                    help="write one Chrome trace per mesh shape into DIR "
+                         "(repro.obs; `python -m repro.obs report` or "
+                         "Perfetto)")
     args = ap.parse_args()
     dataset = args.dataset or ("tiny" if args.smoke else "orkut-s")
     chips = tuple(args.chips) if args.chips else CHIPS
     rounds = args.rounds or (1 if args.smoke else ROUNDS)
+    if args.obs_trace:
+        import os
+
+        os.makedirs(args.obs_trace, exist_ok=True)
     print("name,us_per_call,derived")
     for row in run(chips=chips, dataset=dataset, rounds=rounds,
-                   smoke=args.smoke, strict_time=args.strict_time):
+                   smoke=args.smoke, strict_time=args.strict_time,
+                   obs_dir=args.obs_trace):
         print(row.csv(), flush=True)
 
 

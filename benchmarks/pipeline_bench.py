@@ -68,21 +68,29 @@ SMOKE_SCALE = dict(batch_size=32, hidden=16, fanouts=(4, 4))
 
 
 def _trainer(ds, spec, mode, scale, source, cache_mode="none", cache_cap=0,
-             overlap=False, chunks=1, wire="float32"):
+             overlap=False, chunks=1, wire="float32", obs_path=None):
     cfg = TrainConfig(
         mode=mode, num_devices=NUM_DEVICES, fanouts=scale["fanouts"],
         batch_size=scale["batch_size"], presample_epochs=2, seed=0,
         plan_source=source, pipeline_depth=2, plan_workers=1,
         cache_mode=cache_mode, cache_capacity_per_device=cache_cap,
         shuffle_overlap=overlap, shuffle_chunks=chunks, wire_dtype=wire,
+        obs_trace=obs_path is not None, obs_path=obs_path,
     )
     return Trainer(ds, spec, cfg)
 
 
 def run(modes=("split", "dp"), dataset="orkut-s", rounds=ROUNDS,
-        smoke=False) -> list[Row]:
+        smoke=False, obs_dir=None) -> list[Row]:
     ds = make_dataset(dataset)
     rows = []
+
+    def _obs_path(mode, arm):
+        # one Perfetto-loadable trace per arm, rewritten at every epoch end
+        if obs_dir is None:
+            return None
+        return f"{obs_dir}/pipeline_{dataset}_{mode}_{arm}.json"
+
     for mode in modes:
         scale = SMOKE_SCALE if smoke else MODE_SCALE[mode]
         spec = GNNSpec(
@@ -91,8 +99,14 @@ def run(modes=("split", "dp"), dataset="orkut-s", rounds=ROUNDS,
             num_heads=4,
         )
         trainers = {
-            "serial": _trainer(ds, spec, mode, scale, "serial"),
-            "pipelined": _trainer(ds, spec, mode, scale, "pipelined"),
+            "serial": _trainer(
+                ds, spec, mode, scale, "serial",
+                obs_path=_obs_path(mode, "serial"),
+            ),
+            "pipelined": _trainer(
+                ds, spec, mode, scale, "pipelined",
+                obs_path=_obs_path(mode, "pipelined"),
+            ),
         }
         if mode == "split":
             # GSplit's partition-consistent cache, ~50% of vertices cacheable
@@ -100,15 +114,18 @@ def run(modes=("split", "dp"), dataset="orkut-s", rounds=ROUNDS,
                 ds, spec, mode, scale, "pipelined",
                 cache_mode="partitioned",
                 cache_cap=ds.graph.num_nodes // (2 * NUM_DEVICES),
+                obs_path=_obs_path(mode, "cached"),
             )
             # §3a overlap schedule: split aggregation (fp32 wire), then
             # + feature-axis chunking + the bf16 wire format
             trainers["overlap"] = _trainer(
                 ds, spec, mode, scale, "pipelined", overlap=True,
+                obs_path=_obs_path(mode, "overlap"),
             )
             trainers["overlap_bf16"] = _trainer(
                 ds, spec, mode, scale, "pipelined", overlap=True,
                 chunks=4, wire="bfloat16",
+                obs_path=_obs_path(mode, "overlap_bf16"),
             )
 
         warm = {}
@@ -247,15 +264,23 @@ def main() -> None:
     ap.add_argument("--dataset", default=None)
     ap.add_argument("--modes", nargs="+", default=None)
     ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--obs-trace", metavar="DIR", default=None,
+                    help="write one Chrome trace per arm into DIR "
+                         "(repro.obs; inspect with `python -m repro.obs "
+                         "report DIR/<arm>.json` or load in Perfetto)")
     args = ap.parse_args()
     dataset = args.dataset or ("tiny" if args.smoke else "orkut-s")
     modes = tuple(args.modes) if args.modes else (
         ("split",) if args.smoke else ("split", "dp")
     )
     rounds = args.rounds or (1 if args.smoke else ROUNDS)
+    if args.obs_trace:
+        import os
+
+        os.makedirs(args.obs_trace, exist_ok=True)
     print("name,us_per_call,derived")
     for row in run(modes=modes, dataset=dataset, rounds=rounds,
-                   smoke=args.smoke):
+                   smoke=args.smoke, obs_dir=args.obs_trace):
         print(row.csv(), flush=True)
 
 

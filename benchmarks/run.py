@@ -47,6 +47,17 @@ BENCHES = {
         "Fig. 5 — partitioner quality smoke gate",
         {"dataset": "tiny", "smoke": True},
     ),
+    # the obs subsystem gate (docs/OBSERVABILITY.md): every plan-source
+    # mode traced for two epochs — trace schema valid (no unclosed spans,
+    # flow ids resolve, monotonic record order), trajectories bit-exact vs
+    # the untraced twin, zero steady-state recompiles, and the disabled
+    # path bounded under 1% of a step; same checks as
+    # `python -m benchmarks.obs_smoke`
+    "obs_smoke": (
+        "benchmarks.obs_smoke",
+        "§10 — tracing/metrics schema + overhead gate",
+        {"smoke": True},
+    ),
     # the splint static-analysis pass over the tree (docs/ANALYSIS.md):
     # per-family timing rows + a gate that fails on any unbaselined
     # finding; same checks as `python -m repro.analysis`

@@ -24,6 +24,10 @@ recompiles:
          point (the wire format must have exactly one owner; stray
          down-casts widen back on the next op and corrupt the §3a
          accounting)
+  HP008  obs calls (``repro.obs`` spans / metrics / flow events) inside a
+         jit-reachable function — tracing is host-side by construction
+         (docs/OBSERVABILITY.md): a span in traced code records once at
+         trace time and never again, silently lying in the timeline
 
 Reachability is the conservative closure of ``astutil.reachable_functions``
 over (a) every jit-wrapped function under the root and (b) the configured
@@ -66,6 +70,18 @@ WIRE_CAST_OWNERS: tuple[tuple[str, str], ...] = (
 LOW_PRECISION = {"bfloat16", "float16", "bf16", "fp16"}
 _SYNC_METHODS = {"item", "tolist", "block_until_ready"}
 _NP_MATERIALIZE = {"asarray", "array", "ascontiguousarray", "copy"}
+
+#: repro.obs API surface (HP008): method names that record into the obs
+#: substrate, matched only when the receiver *looks like* an obs object —
+#: a name/attribute chain ending in one of ``_OBS_OWNERS`` (``self.obs``,
+#: ``tracer``, ``NULL_OBS``...). ``record`` stays out of the method set on
+#: generic owners (EdgeTelemetry.record is a host-side API) but any call on
+#: an obs-named owner is flagged.
+_OBS_METHODS = {
+    "span", "record", "instant", "flow_start", "flow_end",
+    "count", "gauge", "observe", "absorb",
+}
+_OBS_OWNERS = {"obs", "tracer", "null_obs"}
 
 
 def _is_static_expr(node: ast.expr) -> bool:
@@ -235,6 +251,34 @@ def _rules_for_function(fn: FunctionInfo, spec: PuritySpec) -> list[Finding]:
                                 ),
                             )
                         )
+
+            # HP008: obs/tracing calls inside jit-traced code
+            obs_call = None
+            if isinstance(node.func, ast.Attribute) and tail in _OBS_METHODS:
+                owner = _dotted_name(node.func.value) or ""
+                if owner.rsplit(".", 1)[-1].lower() in _OBS_OWNERS:
+                    obs_call = f"{owner}.{tail}"
+            if tail == "note_hwm_growth":
+                obs_call = dotted
+            if obs_call is not None:
+                out.append(
+                    Finding(
+                        path=fn.path,
+                        line=node.lineno,
+                        col=node.col_offset,
+                        rule="HP008",
+                        message=(
+                            f"obs call {obs_call}() in jit-reachable "
+                            f"{fn.qualname}: spans/metrics record once at "
+                            "trace time, then never again"
+                        ),
+                        hint=(
+                            "instrument the host-side caller instead — obs "
+                            "is host-only by construction "
+                            "(docs/OBSERVABILITY.md)"
+                        ),
+                    )
+                )
 
         # HP003: host RNG
         if isinstance(node, ast.Attribute):

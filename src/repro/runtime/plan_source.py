@@ -45,6 +45,7 @@ from repro.core.splitting import (
 )
 from repro.graph.cache import CachePlan, FeatureCache, LoadBreakdown
 from repro.graph.sampling import NeighborSampler
+from repro.obs import NULL_OBS, Obs, note_hwm_growth
 from repro.runtime.prefetch import OrderedPrefetcher
 from repro.runtime.signature import SignatureCache, mesh_signature, plan_signature
 
@@ -73,6 +74,9 @@ class PlanBatch:
     cache_plan: CachePlan | None = None
     signature: tuple = ()
     sig_hit: bool = False
+    # producer-side completion time (perf_counter): delivery minus this is
+    # the prefetch-queue dwell, exported as the ``plan/queue_dwell`` span
+    t_built: float = 0.0
 
 
 @dataclass
@@ -94,6 +98,7 @@ class MeshPlanBatch:
     t_load: float = 0.0
     signature: tuple = ()
     sig_hit: bool = False
+    t_built: float = 0.0
 
     @property
     def num_replicas(self) -> int:
@@ -126,6 +131,7 @@ class PlanProducer:
         replication=None,  # core.partition.ReplicationSet | None
         telemetry=None,  # core.partition.EdgeTelemetry | None
         num_replicas: int = 0,  # 0 = 1D path; >=1 = (R, P) mesh fan-out
+        obs: Obs = NULL_OBS,  # tracing/metrics sink (repro.obs)
     ):
         if mode not in ("split", "dp", "pushpull"):
             raise ValueError(f"unknown mode {mode!r}")
@@ -155,48 +161,60 @@ class PlanProducer:
         self.replication = replication
         self.telemetry = telemetry
         self.num_replicas = num_replicas
+        self.obs = obs
 
     def build(self, epoch: int, index: int, targets: np.ndarray):
         from repro.train.plan_io import load_labels, stage_host_features
 
         if self.num_replicas >= 1:
             return self._build_mesh(epoch, index, targets)
-        t0 = time.perf_counter()
-        if self.mode in ("dp", "pushpull"):
-            samples = self.sampler.sample_micro_batch(
-                targets, self.num_devices, epoch, index
-            )
-            t1 = time.perf_counter()
-            plan = build_dp_plan(
-                samples, pad_multiple=self.pad_multiple,
-                with_halves=self.with_halves,
-            )
-        else:
-            # device mode: the cooperative engine samples on-accelerator and
-            # falls back to the host sampler's keyed API on cap overflow —
-            # both are pure functions of (seed, epoch, index)
-            if self.device_sampler is not None:
-                sample = self.device_sampler.sample_batch(targets, epoch, index)
-            else:
-                sample = self.sampler.sample_batch(targets, epoch, index)
-            t1 = time.perf_counter()
-            if self.telemetry is not None:
-                self.telemetry.record(sample)
-            plan = build_split_plan(
-                sample,
-                self.assignment,
-                self.num_devices,
-                pad_multiple=self.pad_multiple,
-                with_halves=self.with_halves,
-                replication=self.replication,
-            )
-        t2 = time.perf_counter()
-        cache_plan, feats, breakdown = stage_host_features(
-            plan, self.features, self.cache, self.serve_cache,
-            self.pad_multiple,
-        )
-        labels = load_labels(plan, self.labels)
-        t3 = time.perf_counter()
+        obs = self.obs
+        with obs.span("plan/build", {"epoch": epoch, "batch": index}):
+            with obs.span("plan/sample") as sp_sample:
+                if self.mode in ("dp", "pushpull"):
+                    samples = self.sampler.sample_micro_batch(
+                        targets, self.num_devices, epoch, index
+                    )
+                else:
+                    # device mode: the cooperative engine samples
+                    # on-accelerator and falls back to the host sampler's
+                    # keyed API on cap overflow — both are pure functions
+                    # of (seed, epoch, index)
+                    if self.device_sampler is not None:
+                        sample = self.device_sampler.sample_batch(
+                            targets, epoch, index
+                        )
+                    else:
+                        sample = self.sampler.sample_batch(targets, epoch, index)
+            with obs.span("plan/split") as sp_split:
+                if self.mode in ("dp", "pushpull"):
+                    plan = build_dp_plan(
+                        samples, pad_multiple=self.pad_multiple,
+                        with_halves=self.with_halves,
+                    )
+                else:
+                    if self.telemetry is not None:
+                        self.telemetry.record(sample)
+                    plan = build_split_plan(
+                        sample,
+                        self.assignment,
+                        self.num_devices,
+                        pad_multiple=self.pad_multiple,
+                        with_halves=self.with_halves,
+                        replication=self.replication,
+                    )
+            with obs.span("plan/load") as sp_load:
+                cache_plan, feats, breakdown = stage_host_features(
+                    plan, self.features, self.cache, self.serve_cache,
+                    self.pad_multiple,
+                )
+                labels = load_labels(plan, self.labels)
+            # the producer end of the flow arrow that lands on the consumer
+            # step training on this plan (keyed by the plan's (epoch, batch))
+            obs.flow_start(("plan", epoch, index))
+        obs.observe("plan/sample_s", sp_sample.duration)
+        obs.observe("plan/split_s", sp_split.duration)
+        obs.observe("plan/load_s", sp_load.duration)
         return PlanBatch(
             index=index,
             epoch=epoch,
@@ -204,10 +222,11 @@ class PlanProducer:
             feats=feats,
             labels=labels,
             breakdown=breakdown,
-            t_sample=t1 - t0,
-            t_split=t2 - t1,
-            t_load=t3 - t2,
+            t_sample=sp_sample.duration,
+            t_split=sp_split.duration,
+            t_load=sp_load.duration,
             cache_plan=cache_plan,
+            t_built=time.perf_counter(),
         )
 
     def _sample_replicas(self, epoch: int, index: int, targets: np.ndarray):
@@ -251,52 +270,57 @@ class PlanProducer:
         """
         from repro.train.plan_io import load_labels, stage_host_features
 
-        t0 = time.perf_counter()
-        samples = self._sample_replicas(epoch, index, targets)
-        t_sample = time.perf_counter() - t0
-        parts, t_split, t_load = [], 0.0, 0.0
-        for sample in samples:
-            t1 = time.perf_counter()
-            if self.telemetry is not None:
-                self.telemetry.record(sample)
-            plan = build_split_plan(
-                sample,
-                self.assignment,
-                self.num_devices,
-                pad_multiple=self.pad_multiple,
-                with_halves=self.with_halves,
-                replication=self.replication,
-            )
-            t2 = time.perf_counter()
-            cache_plan, feats, breakdown = stage_host_features(
-                plan, self.features, self.cache, self.serve_cache,
-                self.pad_multiple,
-            )
-            labels = load_labels(plan, self.labels)
-            t3 = time.perf_counter()
-            t_split += t2 - t1
-            t_load += t3 - t2
-            parts.append(
-                PlanBatch(
-                    index=index,
-                    epoch=epoch,
-                    plan=plan,
-                    feats=feats,
-                    labels=labels,
-                    breakdown=breakdown,
-                    t_sample=0.0,
-                    t_split=t2 - t1,
-                    t_load=t3 - t2,
-                    cache_plan=cache_plan,
+        obs = self.obs
+        with obs.span("plan/build", {"epoch": epoch, "batch": index}):
+            with obs.span("plan/sample") as sp_sample:
+                samples = self._sample_replicas(epoch, index, targets)
+            parts, t_split, t_load = [], 0.0, 0.0
+            for replica, sample in enumerate(samples):
+                with obs.span("plan/split", {"replica": replica}) as sp_split:
+                    if self.telemetry is not None:
+                        self.telemetry.record(sample)
+                    plan = build_split_plan(
+                        sample,
+                        self.assignment,
+                        self.num_devices,
+                        pad_multiple=self.pad_multiple,
+                        with_halves=self.with_halves,
+                        replication=self.replication,
+                    )
+                with obs.span("plan/load", {"replica": replica}) as sp_load:
+                    cache_plan, feats, breakdown = stage_host_features(
+                        plan, self.features, self.cache, self.serve_cache,
+                        self.pad_multiple,
+                    )
+                    labels = load_labels(plan, self.labels)
+                t_split += sp_split.duration
+                t_load += sp_load.duration
+                parts.append(
+                    PlanBatch(
+                        index=index,
+                        epoch=epoch,
+                        plan=plan,
+                        feats=feats,
+                        labels=labels,
+                        breakdown=breakdown,
+                        t_sample=0.0,
+                        t_split=sp_split.duration,
+                        t_load=sp_load.duration,
+                        cache_plan=cache_plan,
+                    )
                 )
-            )
+            obs.flow_start(("plan", epoch, index))
+        obs.observe("plan/sample_s", sp_sample.duration)
+        obs.observe("plan/split_s", t_split)
+        obs.observe("plan/load_s", t_load)
         return MeshPlanBatch(
             index=index,
             epoch=epoch,
             parts=parts,
-            t_sample=t_sample,
+            t_sample=sp_sample.duration,
             t_split=t_split,
             t_load=t_load,
+            t_built=time.perf_counter(),
         )
 
 
@@ -317,6 +341,7 @@ def _finalize_mesh(
     hwm: dict,
     sig_cache: SignatureCache | None,
     sig_extra: tuple = (),
+    obs: Obs = NULL_OBS,
 ) -> MeshPlanBatch:
     """Delivery-side finalize for a mesh batch: two repad passes over the R
     parts against the *shared* high-water marks.
@@ -333,30 +358,37 @@ def _finalize_mesh(
     — the mesh step is one executable, so one cache entry is the honest
     unit.
     """
-    t0 = time.perf_counter()
-    for _ in range(2):
+    if batch.t_built:
+        obs.record("plan/queue_dwell", batch.t_built, time.perf_counter(),
+                   {"epoch": batch.epoch, "batch": batch.index})
+    before = dict(hwm)
+    with obs.span("plan/repad", {"epoch": batch.epoch, "batch": batch.index}) as sp:
+        for _ in range(2):
+            for part in batch.parts:
+                repad_plan(part.plan, hwm)
+                if part.cache_plan is not None:
+                    finalize_cache_plan(
+                        part.cache_plan, hwm, part.plan.front_ids[-1].shape[1]
+                    )
         for part in batch.parts:
-            repad_plan(part.plan, hwm)
             if part.cache_plan is not None:
-                finalize_cache_plan(
-                    part.cache_plan, hwm, part.plan.front_ids[-1].shape[1]
+                part.feats = pad_axis(part.feats, 1, hwm["CM"])
+            else:
+                part.feats = pad_axis(
+                    part.feats, 1, part.plan.front_ids[-1].shape[1]
                 )
-    for part in batch.parts:
-        if part.cache_plan is not None:
-            part.feats = pad_axis(part.feats, 1, hwm["CM"])
-        else:
-            part.feats = pad_axis(
-                part.feats, 1, part.plan.front_ids[-1].shape[1]
+            part.labels = pad_axis(
+                part.labels, 1, part.plan.front_ids[0].shape[1]
             )
-        part.labels = pad_axis(
-            part.labels, 1, part.plan.front_ids[0].shape[1]
-        )
-    batch.t_split += time.perf_counter() - t0
+    note_hwm_growth(obs, before, hwm, f"epoch{batch.epoch}/batch{batch.index}")
+    batch.t_split += sp.duration
+    obs.observe("plan/repad_s", sp.duration)
     batch.signature = mesh_signature(
         [(p.plan, p.cache_plan) for p in batch.parts], sig_extra
     )
     if sig_cache is not None:
         batch.sig_hit = sig_cache.record(batch.signature)
+        obs.count("sig/hit" if batch.sig_hit else "sig/miss")
     return batch
 
 
@@ -365,6 +397,7 @@ def _finalize(
     hwm: dict,
     sig_cache: SignatureCache | None,
     sig_extra: tuple = (),
+    obs: Obs = NULL_OBS,
 ) -> PlanBatch:
     """Order-sensitive delivery step: repad to high-water marks, pad the
     staged feature/label blocks to match, and record the jit signature.
@@ -372,26 +405,38 @@ def _finalize(
     The cache plan is repadded here too (keys ``CM``/``CS``): its arrays are
     purely position-based, so growing them only appends masked entries —
     unlike ``edge_src``, nothing needs rebasing. Mesh batches take the
-    two-pass variant above.
+    two-pass variant above. Observability rides the delivery point: the
+    queue-dwell span (producer completion -> here), the repad span, any
+    high-water-mark growth (a retrace warning — see ``note_hwm_growth``),
+    and the signature hit/miss counters.
     """
     if isinstance(batch, MeshPlanBatch):
-        return _finalize_mesh(batch, hwm, sig_cache, sig_extra)
-    t0 = time.perf_counter()
-    repad_plan(batch.plan, hwm)
-    if batch.cache_plan is not None:
-        finalize_cache_plan(
-            batch.cache_plan, hwm, batch.plan.front_ids[-1].shape[1]
+        return _finalize_mesh(batch, hwm, sig_cache, sig_extra, obs)
+    if batch.t_built:
+        obs.record("plan/queue_dwell", batch.t_built, time.perf_counter(),
+                   {"epoch": batch.epoch, "batch": batch.index})
+    before = dict(hwm)
+    with obs.span("plan/repad", {"epoch": batch.epoch, "batch": batch.index}) as sp:
+        repad_plan(batch.plan, hwm)
+        if batch.cache_plan is not None:
+            finalize_cache_plan(
+                batch.cache_plan, hwm, batch.plan.front_ids[-1].shape[1]
+            )
+            batch.feats = pad_axis(batch.feats, 1, hwm["CM"])
+        else:
+            batch.feats = pad_axis(
+                batch.feats, 1, batch.plan.front_ids[-1].shape[1]
+            )
+        batch.labels = pad_axis(
+            batch.labels, 1, batch.plan.front_ids[0].shape[1]
         )
-        batch.feats = pad_axis(batch.feats, 1, hwm["CM"])
-    else:
-        batch.feats = pad_axis(
-            batch.feats, 1, batch.plan.front_ids[-1].shape[1]
-        )
-    batch.labels = pad_axis(batch.labels, 1, batch.plan.front_ids[0].shape[1])
-    batch.t_split += time.perf_counter() - t0
+    note_hwm_growth(obs, before, hwm, f"epoch{batch.epoch}/batch{batch.index}")
+    batch.t_split += sp.duration
+    obs.observe("plan/repad_s", sp.duration)
     batch.signature = plan_signature(batch.plan, batch.cache_plan, sig_extra)
     if sig_cache is not None:
         batch.sig_hit = sig_cache.record(batch.signature)
+        obs.count("sig/hit" if batch.sig_hit else "sig/miss")
     return batch
 
 
@@ -427,6 +472,7 @@ class SerialPlanSource(PlanSource):
     # static program-structure key (wire_dtype, chunks, overlap) folded into
     # every delivered signature — see ``plan_signature``
     sig_extra: tuple = ()
+    obs: Obs = NULL_OBS
 
     def __iter__(self) -> Iterator[PlanBatch]:
         for idx, targets in enumerate(self.batches):
@@ -435,6 +481,7 @@ class SerialPlanSource(PlanSource):
                 self.hwm,
                 self.sig_cache,
                 self.sig_extra,
+                self.obs,
             )
 
     def stats(self) -> dict:
@@ -451,6 +498,7 @@ class PipelinedPlanSource(PlanSource):
     hwm: dict
     sig_cache: SignatureCache | None = None
     sig_extra: tuple = ()
+    obs: Obs = NULL_OBS
     depth: int = 4
     workers: int = 2
     _prefetcher: OrderedPrefetcher | None = field(
@@ -468,7 +516,9 @@ class PipelinedPlanSource(PlanSource):
         )
         try:
             for batch in self._prefetcher:
-                yield _finalize(batch, self.hwm, self.sig_cache, self.sig_extra)
+                yield _finalize(
+                    batch, self.hwm, self.sig_cache, self.sig_extra, self.obs
+                )
         finally:
             self.close()
 
@@ -536,22 +586,25 @@ def make_plan_source(
     depth: int = 4,
     workers: int = 2,
     sig_extra: tuple = (),
+    obs: Obs = NULL_OBS,
 ) -> PlanSource:
     if kind == "serial":
         return SerialPlanSource(
-            producer, epoch, batches, hwm, sig_cache, sig_extra
+            producer, epoch, batches, hwm, sig_cache, sig_extra, obs
         )
     if kind == "pipelined":
         return PipelinedPlanSource(
-            producer, epoch, batches, hwm, sig_cache, sig_extra, depth, workers
+            producer, epoch, batches, hwm, sig_cache, sig_extra, obs,
+            depth, workers,
         )
     if kind == "device":
         return DevicePlanSource(
-            producer, epoch, batches, hwm, sig_cache, sig_extra
+            producer, epoch, batches, hwm, sig_cache, sig_extra, obs
         )
     if kind == "device_pipelined":
         return DevicePipelinedPlanSource(
-            producer, epoch, batches, hwm, sig_cache, sig_extra, depth, workers
+            producer, epoch, batches, hwm, sig_cache, sig_extra, obs,
+            depth, workers,
         )
     raise ValueError(
         f"unknown plan source {kind!r} "

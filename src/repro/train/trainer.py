@@ -37,6 +37,7 @@ from repro.graph.datasets import GraphDataset
 from repro.graph.sampling import NeighborSampler
 from repro.models.gnn import GNNSpec, init_gnn_params
 from repro.models.gnn.layers import gnn_forward, gnn_forward_cached
+from repro.obs import NULL_OBS, Obs, note_hwm_growth
 from repro.runtime import (
     MeshPlanBatch,
     PlanBatch,
@@ -105,6 +106,18 @@ class TrainConfig:
     # per-epoch counts land in ``EpochStats.recompiles``. Steady state at
     # fixed caps must be zero — tests/test_runtime.py regresses this.
     trace_recompiles: bool = False
+    # Unified tracing + metrics (repro.obs, DESIGN.md §10): record spans for
+    # every host stage (producer build, queue dwell, repad, staging, the
+    # device sync) flow-linked per (epoch, batch), plus the metrics registry
+    # (signature/cache hit rates, wire bytes, HWM growth, recompiles,
+    # prefetch occupancy). Off by default: the disabled path shares the
+    # same code but records nothing and adds no host syncs (<1% step time,
+    # gated by benchmarks/run.py obs_smoke).
+    obs_trace: bool = False
+    # When set (and obs_trace=True), ``train_epoch`` rewrites this path
+    # with the cumulative Chrome trace (Perfetto-loadable; includes the
+    # metrics snapshot) at every epoch end.
+    obs_path: str | None = None
     # 2D (replica, split) mesh (DESIGN.md §9): 0 = the classic 1D P-way
     # split path (default); R >= 1 runs R replica groups of ``num_devices``
     # splits each — every global batch fans out into R independently
@@ -241,6 +254,9 @@ class Trainer:
                 "pushpull are already replica-style baselines"
             )
         self.ds = dataset
+        # one obs sink per trainer when tracing; the shared disabled
+        # singleton otherwise (single code path — see repro.obs)
+        self.obs = Obs(enabled=True) if cfg.obs_trace else NULL_OBS
         # the config's execution-schedule knobs are authoritative: the spec
         # the caller hands in describes the model, the TrainConfig describes
         # how this trainer runs it
@@ -384,6 +400,7 @@ class Trainer:
             replication=self.replication,
             telemetry=self.telemetry,
             num_replicas=cfg.num_replicas,
+            obs=self.obs,
         )
 
     # ------------------------------------------------------------------ #
@@ -501,28 +518,30 @@ class Trainer:
     # ------------------------------------------------------------------ #
     def _plan_for(self, targets: np.ndarray):
         cfg = self.cfg
-        t0 = time.perf_counter()
-        if cfg.mode in ("dp", "pushpull"):
-            samples = self.sampler.sample_micro(targets, cfg.num_devices)
-            t1 = time.perf_counter()
-            plan = build_dp_plan(
-                samples, pad_multiple=cfg.pad_multiple,
-                with_halves=cfg.shuffle_overlap,
-            )
-        else:
-            sample = self.sampler.sample(targets)
-            t1 = time.perf_counter()
-            plan = build_split_plan(
-                sample,
-                self.partition.assignment,
-                cfg.num_devices,
-                pad_multiple=cfg.pad_multiple,
-                with_halves=cfg.shuffle_overlap,
-                replication=self.replication,
-            )
-        plan = repad_plan(plan, self._pad_hwm)
-        t2 = time.perf_counter()
-        return plan, t1 - t0, t2 - t1
+        with self.obs.span("plan/sample") as sp_sample:
+            if cfg.mode in ("dp", "pushpull"):
+                samples = self.sampler.sample_micro(targets, cfg.num_devices)
+            else:
+                sample = self.sampler.sample(targets)
+        with self.obs.span("plan/split") as sp_split:
+            if cfg.mode in ("dp", "pushpull"):
+                plan = build_dp_plan(
+                    samples, pad_multiple=cfg.pad_multiple,
+                    with_halves=cfg.shuffle_overlap,
+                )
+            else:
+                plan = build_split_plan(
+                    sample,
+                    self.partition.assignment,
+                    cfg.num_devices,
+                    pad_multiple=cfg.pad_multiple,
+                    with_halves=cfg.shuffle_overlap,
+                    replication=self.replication,
+                )
+            before = dict(self._pad_hwm)
+            plan = repad_plan(plan, self._pad_hwm)
+        note_hwm_growth(self.obs, before, self._pad_hwm, "train_iter")
+        return plan, sp_sample.duration, sp_split.duration
 
     def _mesh_plan_for(self, targets: np.ndarray):
         """Inline-path mesh fan-out: R streamed samples -> R repadded plans.
@@ -536,77 +555,83 @@ class Trainer:
         """
         cfg = self.cfg
         R = cfg.num_replicas
-        t0 = time.perf_counter()
-        chunks = [targets] if R == 1 else np.array_split(targets, R)
-        samples = [self.sampler.sample(c) for c in chunks]
-        t1 = time.perf_counter()
-        plans = [
-            build_split_plan(
-                s,
-                self.partition.assignment,
-                cfg.num_devices,
-                pad_multiple=cfg.pad_multiple,
-                with_halves=cfg.shuffle_overlap,
-                replication=self.replication,
-            )
-            for s in samples
-        ]
-        for _ in range(2):
-            for plan in plans:
-                repad_plan(plan, self._pad_hwm)
-        t2 = time.perf_counter()
-        return plans, t1 - t0, t2 - t1
+        with self.obs.span("plan/sample") as sp_sample:
+            chunks = [targets] if R == 1 else np.array_split(targets, R)
+            samples = [self.sampler.sample(c) for c in chunks]
+        with self.obs.span("plan/split") as sp_split:
+            plans = [
+                build_split_plan(
+                    s,
+                    self.partition.assignment,
+                    cfg.num_devices,
+                    pad_multiple=cfg.pad_multiple,
+                    with_halves=cfg.shuffle_overlap,
+                    replication=self.replication,
+                )
+                for s in samples
+            ]
+            before = dict(self._pad_hwm)
+            for _ in range(2):
+                for plan in plans:
+                    repad_plan(plan, self._pad_hwm)
+        note_hwm_growth(self.obs, before, self._pad_hwm, "train_iter")
+        return plans, sp_sample.duration, sp_split.duration
 
     def _train_iter_mesh(self, targets: np.ndarray) -> IterStats:
         plans, t_sample, t_split = self._mesh_plan_for(targets)
 
-        t0 = time.perf_counter()
-        staged = []  # [plan, cache_plan, feats, labels, breakdown]
-        for plan in plans:
-            cache_plan, feats, breakdown = stage_host_features(
-                plan, self.ds.features, self.cache,
-                serve_cache=self.cache_block is not None,
-                pad_multiple=self.cfg.pad_multiple,
-            )
-            labels = load_labels(plan, self.ds.labels)
-            staged.append([plan, cache_plan, feats, labels, breakdown])
-        # cache widths follow the shared CM/CS marks, settled over all R
-        # parts before any feature block is padded (two-pass, like plans)
-        for _ in range(2):
-            for plan, cache_plan, *_ in staged:
-                if cache_plan is not None:
-                    finalize_cache_plan(
-                        cache_plan, self._pad_hwm, plan.front_ids[-1].shape[1]
-                    )
-        for entry in staged:
-            if entry[1] is not None:
-                entry[2] = pad_axis(entry[2], 1, self._pad_hwm["CM"])
-        t_load = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        cached = staged[0][1] is not None
-        replicas = []
-        for plan, cache_plan, feats, labels, _ in staged:
-            plan_arrays = self._attach_rep(
-                plan_to_device(
-                    plan, cache_plan, with_halves=self.cfg.shuffle_overlap,
-                    num_replicated=self._num_replicated(),
+        with self.obs.span("plan/load") as sp_load:
+            staged = []  # [plan, cache_plan, feats, labels, breakdown]
+            for plan in plans:
+                cache_plan, feats, breakdown = stage_host_features(
+                    plan, self.ds.features, self.cache,
+                    serve_cache=self.cache_block is not None,
+                    pad_multiple=self.cfg.pad_multiple,
                 )
+                labels = load_labels(plan, self.ds.labels)
+                staged.append([plan, cache_plan, feats, labels, breakdown])
+            # cache widths follow the shared CM/CS marks, settled over all R
+            # parts before any feature block is padded (two-pass, like plans)
+            for _ in range(2):
+                for plan, cache_plan, *_ in staged:
+                    if cache_plan is not None:
+                        finalize_cache_plan(
+                            cache_plan, self._pad_hwm,
+                            plan.front_ids[-1].shape[1],
+                        )
+            for entry in staged:
+                if entry[1] is not None:
+                    entry[2] = pad_axis(entry[2], 1, self._pad_hwm["CM"])
+
+        with self.obs.span("step", {"wait_s": 0.0}) as step_sp:
+            with self.obs.span("step/stage") as sp_stage:
+                cached = staged[0][1] is not None
+                replicas = []
+                for plan, cache_plan, feats, labels, _ in staged:
+                    plan_arrays = self._attach_rep(
+                        plan_to_device(
+                            plan, cache_plan,
+                            with_halves=self.cfg.shuffle_overlap,
+                            num_replicated=self._num_replicated(),
+                        )
+                    )
+                    inputs = (
+                        (self.cache_block, jnp.asarray(feats))
+                        if cached
+                        else jnp.asarray(feats)
+                    )
+                    replicas.append((inputs, plan_arrays, jnp.asarray(labels)))
+                fn = self._mesh_cached_step_fn if cached else self._mesh_step_fn
+                self.params, self.opt_state, loss, acc = fn(
+                    self.params, self.opt_state, tuple(replicas)
+                )
+            if self.recompiles is not None:
+                self.recompiles.step("train_iter")
+            with self.obs.span("step/device") as sp_dev:
+                loss, acc = jax.device_get((loss, acc))
+            step_sp.attrs.update(
+                stage_s=sp_stage.duration, device_s=sp_dev.duration
             )
-            inputs = (
-                (self.cache_block, jnp.asarray(feats))
-                if cached
-                else jnp.asarray(feats)
-            )
-            replicas.append((inputs, plan_arrays, jnp.asarray(labels)))
-        fn = self._mesh_cached_step_fn if cached else self._mesh_step_fn
-        self.params, self.opt_state, loss, acc = fn(
-            self.params, self.opt_state, tuple(replicas)
-        )
-        if self.recompiles is not None:
-            self.recompiles.step("train_iter")
-        loss, acc = jax.device_get((loss, acc))
-        t_compute = time.perf_counter() - t0
         return self._mesh_iter_stats(
             plans,
             [entry[4] for entry in staged],
@@ -614,8 +639,8 @@ class Trainer:
             float(acc),
             t_sample,
             t_split,
-            t_load,
-            t_compute,
+            sp_load.duration,
+            sp_stage.duration + sp_dev.duration,
         )
 
     def train_iter(self, targets: np.ndarray) -> IterStats:
@@ -623,54 +648,59 @@ class Trainer:
             return self._train_iter_mesh(targets)
         plan, t_sample, t_split = self._plan_for(targets)
 
-        t0 = time.perf_counter()
-        cache_plan, feats, breakdown = stage_host_features(
-            plan, self.ds.features, self.cache,
-            serve_cache=self.cache_block is not None,
-            pad_multiple=self.cfg.pad_multiple,
-        )
-        if cache_plan is not None:
-            # widths follow the same high-water marks as the plan itself
-            # (stable jit signatures); _plan_for already repadded the plan
-            finalize_cache_plan(
-                cache_plan, self._pad_hwm, plan.front_ids[-1].shape[1]
+        with self.obs.span("plan/load") as sp_load:
+            cache_plan, feats, breakdown = stage_host_features(
+                plan, self.ds.features, self.cache,
+                serve_cache=self.cache_block is not None,
+                pad_multiple=self.cfg.pad_multiple,
             )
-            feats = pad_axis(feats, 1, self._pad_hwm["CM"])
-        labels = load_labels(plan, self.ds.labels)
-        t_load = time.perf_counter() - t0
+            if cache_plan is not None:
+                # widths follow the same high-water marks as the plan itself
+                # (stable jit signatures); _plan_for already repadded the plan
+                finalize_cache_plan(
+                    cache_plan, self._pad_hwm, plan.front_ids[-1].shape[1]
+                )
+                feats = pad_axis(feats, 1, self._pad_hwm["CM"])
+            labels = load_labels(plan, self.ds.labels)
 
-        t0 = time.perf_counter()
-        plan_arrays = self._attach_rep(
-            plan_to_device(
-                plan, cache_plan, with_halves=self.cfg.shuffle_overlap,
-                num_replicated=self._num_replicated(),
+        with self.obs.span("step", {"wait_s": 0.0}) as step_sp:
+            with self.obs.span("step/stage") as sp_stage:
+                plan_arrays = self._attach_rep(
+                    plan_to_device(
+                        plan, cache_plan, with_halves=self.cfg.shuffle_overlap,
+                        num_replicated=self._num_replicated(),
+                    )
+                )
+                if cache_plan is not None:
+                    self.params, self.opt_state, loss, acc = (
+                        self._cached_step_fn(
+                            self.params, self.opt_state,
+                            (self.cache_block, jnp.asarray(feats)),
+                            plan_arrays, jnp.asarray(labels),
+                        )
+                    )
+                else:
+                    self.params, self.opt_state, loss, acc = self._step_fn(
+                        self.params, self.opt_state, jnp.asarray(feats),
+                        plan_arrays, jnp.asarray(labels),
+                    )
+            if self.recompiles is not None:
+                self.recompiles.step("train_iter")
+            # one transfer for both scalars: float(loss); float(acc) would
+            # pay two round-trips to the device
+            with self.obs.span("step/device") as sp_dev:
+                loss, acc = jax.device_get((loss, acc))
+            step_sp.attrs.update(
+                stage_s=sp_stage.duration, device_s=sp_dev.duration
             )
-        )
-        if cache_plan is not None:
-            self.params, self.opt_state, loss, acc = self._cached_step_fn(
-                self.params, self.opt_state,
-                (self.cache_block, jnp.asarray(feats)), plan_arrays,
-                jnp.asarray(labels),
-            )
-        else:
-            self.params, self.opt_state, loss, acc = self._step_fn(
-                self.params, self.opt_state, jnp.asarray(feats), plan_arrays,
-                jnp.asarray(labels),
-            )
-        if self.recompiles is not None:
-            self.recompiles.step("train_iter")
-        # one transfer for both scalars: float(loss); float(acc) would pay
-        # two round-trips to the device
-        loss, acc = jax.device_get((loss, acc))
-        t_compute = time.perf_counter() - t0
 
-        return IterStats(
+        st = IterStats(
             loss=float(loss),
             accuracy=float(acc),
             t_sample=t_sample,
             t_split=t_split,
-            t_load=t_load,
-            t_compute=t_compute,
+            t_load=sp_load.duration,
+            t_compute=sp_stage.duration + sp_dev.duration,
             loaded_rows=plan.loaded_feature_rows(),
             computed_edges=plan.computed_edges(),
             shuffle_rows=plan.shuffle_rows(),
@@ -681,6 +711,8 @@ class Trainer:
             cross_edge_fraction=plan.cross_edge_fraction(),
             wire_bytes=modeled_wire_bytes(plan, self.spec, self.cfg.wire_dtype),
         )
+        self._emit_iter_metrics(st)
+        return st
 
     # ------------------------------------------------------------------ #
     def plan_source_for(self, epoch: int, max_iters: int | None = None):
@@ -702,6 +734,7 @@ class Trainer:
                 self.cfg.shuffle_chunks,
                 self.cfg.shuffle_overlap,
             ),
+            obs=self.obs,
         )
 
     def _step_mesh_batch(self, batch: MeshPlanBatch):
@@ -770,7 +803,7 @@ class Trainer:
                 remote_hit=sum(b.remote_hit for b in breakdowns),
                 host_miss=sum(b.host_miss for b in breakdowns),
             )
-        return IterStats(
+        st = IterStats(
             loss=float(loss),
             accuracy=float(acc),
             t_sample=t_sample,
@@ -794,32 +827,49 @@ class Trainer:
                 for p in plans
             ),
         )
+        self._emit_iter_metrics(st)
+        return st
 
-    def _iter_stats(self, batch: PlanBatch, loss, acc, t0: float) -> IterStats:
+    def _emit_iter_metrics(self, st: IterStats) -> None:
+        """Fold one step's IterStats into the metrics registry (no-op when
+        obs is disabled — the counters mirror what EpochStats.totals() sums,
+        so a written trace is self-contained without the stats object)."""
+        obs = self.obs
+        if not obs.enabled:
+            return
+        obs.observe("step/compute_s", st.t_compute)
+        obs.count("wire/bytes", st.wire_bytes)
+        obs.count("plan/loaded_rows", st.loaded_rows)
+        obs.count("plan/shuffle_rows", st.shuffle_rows)
+        if st.load_breakdown is not None:
+            obs.count("cache/local_hit", st.load_breakdown.local_hit)
+            obs.count("cache/remote_hit", st.load_breakdown.remote_hit)
+            obs.count("cache/host_miss", st.load_breakdown.host_miss)
+
+    def _iter_stats(
+        self, batch: PlanBatch, loss: float, acc: float, t_compute: float
+    ) -> IterStats:
+        """IterStats for one delivered batch; ``loss``/``acc`` are already
+        host floats (the epoch loop owns the device_get sync point)."""
         if isinstance(batch, MeshPlanBatch):
-            loss, acc = jax.device_get((loss, acc))
             return self._mesh_iter_stats(
                 [p.plan for p in batch.parts],
                 [p.breakdown for p in batch.parts],
-                float(loss),
-                float(acc),
+                loss,
+                acc,
                 batch.t_sample,
                 batch.t_split,
                 batch.t_load,
-                time.perf_counter() - t0,
+                t_compute,
             )
         plan = batch.plan
-        # one transfer fetches both scalars and blocks until the step's
-        # results are ready — the epoch loop's single designed sync point
-        # (float(loss); float(acc) would pay two device round-trips)
-        loss, acc = jax.device_get((loss, acc))
-        return IterStats(
-            loss=float(loss),
-            accuracy=float(acc),
+        st = IterStats(
+            loss=loss,
+            accuracy=acc,
             t_sample=batch.t_sample,
             t_split=batch.t_split,
             t_load=batch.t_load,
-            t_compute=time.perf_counter() - t0,
+            t_compute=t_compute,
             loaded_rows=plan.loaded_feature_rows(),
             computed_edges=plan.computed_edges(),
             shuffle_rows=plan.shuffle_rows(),
@@ -830,6 +880,8 @@ class Trainer:
             cross_edge_fraction=plan.cross_edge_fraction(),
             wire_bytes=modeled_wire_bytes(plan, self.spec, self.cfg.wire_dtype),
         )
+        self._emit_iter_metrics(st)
+        return st
 
     def train_epoch(self, max_iters: int | None = None) -> EpochStats:
         """One epoch through the configured plan source.
@@ -851,10 +903,38 @@ class Trainer:
         mark = self.recompiles.mark() if self.recompiles is not None else None
         t_epoch = time.perf_counter()
         try:
-            for batch in source:
-                t0 = time.perf_counter()
-                loss, acc = self._step_batch(batch)
-                stats.iters.append(self._iter_stats(batch, loss, acc, t0))
+            it = iter(source)
+            while True:
+                # time blocked on the source: the producer-bound component
+                # of the step (serial sources do the whole build here)
+                with self.obs.span("step/wait") as sp_wait:
+                    batch = next(it, None)
+                if batch is None:
+                    break
+                with self.obs.span(
+                    "step", {"epoch": batch.epoch, "batch": batch.index}
+                ) as step_sp:
+                    # close the flow arrow from this plan's producer span
+                    self.obs.flow_end(("plan", batch.epoch, batch.index))
+                    with self.obs.span("step/stage") as sp_stage:
+                        loss, acc = self._step_batch(batch)
+                    # one transfer fetches both scalars and blocks until the
+                    # step's results are ready — the epoch loop's single
+                    # designed sync point (float(loss); float(acc) would pay
+                    # two device round-trips)
+                    with self.obs.span("step/device") as sp_dev:
+                        loss, acc = jax.device_get((loss, acc))
+                    step_sp.attrs.update(
+                        wait_s=sp_wait.duration,
+                        stage_s=sp_stage.duration,
+                        device_s=sp_dev.duration,
+                    )
+                stats.iters.append(
+                    self._iter_stats(
+                        batch, float(loss), float(acc),
+                        sp_stage.duration + sp_dev.duration,
+                    )
+                )
                 if self.recompiles is not None:
                     self.recompiles.step(f"epoch{self._epoch}")
                 if stats.t_first_iter == 0.0:
@@ -863,8 +943,15 @@ class Trainer:
             source.close()
         if mark is not None:
             stats.recompiles = self.recompiles.since(mark)
+            self.obs.count(
+                "recompile/misses", int(stats.recompiles.get("misses", 0))
+            )
         stats.pipeline = source.stats()
         stats.t_wall = time.perf_counter() - t_epoch
+        if self.obs.enabled:
+            self.obs.absorb(stats.pipeline, prefix="source/")
+            if self.cfg.obs_path:
+                self.obs.write(self.cfg.obs_path)
         self._epoch += 1
         return stats
 

@@ -237,6 +237,29 @@ def test_purity_hp006_static_argnames_mismatch(tmp_path):
     assert "'typo'" in findings[0].message
 
 
+def test_purity_hp008_obs_calls_in_hot_path(tmp_path):
+    _write(
+        tmp_path,
+        "pkg/hot.py",
+        """
+        import jax.numpy as jnp
+
+        def step(x, obs, telemetry):
+            with obs.span("step/stage"):
+                y = x * 2
+            obs.count("steps")
+            telemetry.record(x)
+            note_hwm_growth(obs, {}, {}, "step")
+            return y
+        """,
+    )
+    findings = check_purity(tmp_path, _purity_spec())
+    got = {(f.rule, f.line) for f in findings}
+    # obs.span / obs.count / note_hwm_growth fire; telemetry.record (same
+    # method name, non-obs owner) stays clean
+    assert got == {("HP008", 5), ("HP008", 7), ("HP008", 9)}
+
+
 def test_purity_shape_math_is_clean(tmp_path):
     _write(
         tmp_path,

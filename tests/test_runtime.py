@@ -81,6 +81,77 @@ def test_prefetcher_raises_at_failing_index_and_shuts_down():
     assert pf.closed  # generator finally-block joined the workers
 
 
+def test_prefetcher_stats_under_out_of_order_completion():
+    """Occupancy accounting with a hand-scheduled reverse-order producer.
+
+    Four gated workers claim items 0..3; releasing them 3,2,1,0 fills the
+    reorder buffer completely before item 0 (the only deliverable one)
+    lands. Delivery then drains the buffer 4->3->2->1, so the stats are
+    exact: occupancy max 4, mean 2.5, no consumer wait once full.
+    """
+    gates = [threading.Event() for _ in range(4)]
+
+    def fn(i):
+        gates[i].wait(timeout=10.0)
+        return i
+
+    pf = OrderedPrefetcher(fn, 4, depth=4, workers=4)
+    try:
+        for i in (3, 2, 1, 0):  # complete in reverse delivery order
+            gates[i].set()
+        # wait until every item has been posted to the reorder buffer
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            with pf._lock:
+                if len(pf._buffer) == 4:
+                    break
+            time.sleep(0.001)
+        assert list(pf) == [0, 1, 2, 3]  # order restored despite completion
+    finally:
+        pf.close()
+    assert pf.stats.delivered == 4
+    assert pf.stats.occupancy_max == 4  # the buffer really held all 4
+    assert pf.stats.mean_occupancy == pytest.approx(2.5)  # (4+3+2+1)/4
+    assert pf.stats.consumer_waits == 0  # everything was ready up front
+    assert pf.stats.as_dict()["max_occupancy"] == 4
+
+
+def test_prefetcher_counts_consumer_waits_when_producer_lags():
+    """Each delivery blocks until the matching gate opens, so every one of
+    the four deliveries is a counted consumer wait."""
+    gates = [threading.Event() for _ in range(4)]
+
+    def fn(i):
+        gates[i].wait(timeout=10.0)
+        return i
+
+    pf = OrderedPrefetcher(fn, 4, depth=4, workers=4)
+    got = []
+
+    def consume():
+        got.extend(pf)
+
+    t = threading.Thread(target=consume)
+    t.start()
+    try:
+        for i in range(4):
+            # release item i only after the consumer is provably blocked
+            deadline = time.monotonic() + 10.0
+            while pf.stats.consumer_waits < i + 1:
+                assert time.monotonic() < deadline, "consumer never blocked"
+                time.sleep(0.001)
+            gates[i].set()
+        t.join(timeout=10.0)
+    finally:
+        for g in gates:
+            g.set()
+        pf.close()
+    assert got == [0, 1, 2, 3]
+    assert pf.stats.consumer_waits == 4  # every delivery blocked
+    assert pf.stats.occupancy_max == 1  # nothing ever queued ahead
+    assert pf.stats.mean_occupancy == pytest.approx(1.0)
+
+
 def test_prefetcher_close_midstream_joins_workers():
     def fn(i):
         time.sleep(0.001)
