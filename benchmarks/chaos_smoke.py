@@ -1,0 +1,350 @@
+"""Fault-tolerance smoke gate: deterministic chaos, bitwise recovery.
+
+Four guarantees the robustness layer (repro.faults, docs/ROBUSTNESS.md)
+makes, each proven on the tiny dataset cheaply enough for CI — and proven
+*bitwise* where the claim is determinism, not merely "it didn't crash":
+
+  1. **Kill-and-resume is invisible.** A run killed mid-epoch (injected
+     ``FaultInjected`` at an exact (epoch, batch) coordinate) and resumed
+     from its newest checkpoint by a fresh ``Trainer`` walks the identical
+     per-step loss/accuracy trajectory as the uninterrupted twin and ends
+     with bit-identical params *and* optimizer state — for the serial and
+     the pipelined plan source.
+
+  2. **Transient faults vanish inside the retry budget.** A build fault
+     injected ``times=2`` against ``plan_retries=3`` recovers in place:
+     the trajectory is bit-exact vs clean, the retry counter records
+     exactly the injected firings, and the steady state stays
+     recompile-free (recovery re-runs the same pure build — no new jit
+     signatures).
+
+  3. **A crashed producer thread is respawned and its batch recovered.**
+     An injected ``WorkerCrash`` kills one producer mid-epoch; the
+     supervisor respawns a replacement, the requeued batch is rebuilt,
+     and the trajectory stays bit-exact vs clean.
+
+  4. **Corruption is detected, stalls are bounded.** A byte-flipped
+     newest checkpoint fails its content checksum and
+     ``load_latest_checkpoint`` falls back to the previous good one (a
+     torn/truncated payload likewise); a producer stalled past
+     ``stall_timeout_s`` raises ``PipelineStallError`` naming the stuck
+     index within the timeout instead of hanging the epoch.
+
+Injection is schedule-driven and seeded (repro.faults.inject): the same
+faults hit the same batches every run, so every assertion here is exact.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.faults.errors import (
+    CheckpointError,
+    FaultInjected,
+    PipelineStallError,
+)
+from repro.faults.inject import (
+    FaultAction,
+    FaultInjector,
+    corrupt_checkpoint,
+    truncate_checkpoint,
+)
+from repro.graph.datasets import make_dataset
+from repro.models.gnn import GNNSpec
+from repro.train.checkpoint import (
+    list_checkpoints,
+    load_checkpoint,
+    load_latest_checkpoint,
+)
+from repro.train.trainer import TrainConfig, Trainer
+
+SOURCES = ("serial", "pipelined")
+SCALE = dict(batch_size=16, hidden=16, fanouts=(4, 4))
+KILL_AT = dict(epoch=1, batch=2)  # mid-epoch, after >=1 checkpoint exists
+
+
+def _cfg(source: str, **over) -> TrainConfig:
+    return TrainConfig(
+        mode="split", num_devices=4, fanouts=SCALE["fanouts"],
+        batch_size=SCALE["batch_size"], presample_epochs=2, seed=0,
+        plan_source=source, pipeline_depth=2, plan_workers=2,
+        trace_recompiles=True, **over,
+    )
+
+
+def _spec(ds) -> GNNSpec:
+    return GNNSpec(
+        model="sage", in_dim=ds.spec.feat_dim, hidden_dim=SCALE["hidden"],
+        out_dim=ds.spec.num_classes, num_layers=len(SCALE["fanouts"]),
+        num_heads=4,
+    )
+
+
+def _tree_equal(a, b) -> bool:
+    import jax
+
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb)
+    )
+
+
+def _clean_run(ds, spec, source: str, epochs: int):
+    """Uninterrupted reference: per-step trajectory, final state, recompiles."""
+    tr = Trainer(ds, spec, _cfg(source))
+    traj: dict[int, tuple[float, float]] = {}
+    misses: list[int] = []
+    for _ in range(epochs):
+        st = tr.train_epoch()
+        start = tr.global_step - len(st.iters)
+        for i, it in enumerate(st.iters):
+            traj[start + i + 1] = (it.loss, it.accuracy)
+        misses.append(int(st.recompiles.get("misses", 0)))
+    return tr, traj, misses
+
+
+# --------------------------------------------------------------------- #
+# gate 1: kill mid-epoch, resume from checkpoint, bitwise continuation
+# --------------------------------------------------------------------- #
+def _gate_kill_resume(ds, spec, source, clean_tr, clean_traj, epochs, tmpdir):
+    root = os.path.join(tmpdir, f"kill_{source}")
+    cfg = _cfg(source, ckpt_dir=root, ckpt_every=1)
+    inj = FaultInjector(schedule=[FaultAction("kill", **KILL_AT)])
+    tr = Trainer(ds, spec, cfg, injector=inj)
+    traj: dict[int, tuple[float, float]] = {}
+    killed = resumed_step = 0
+    done = 0
+    while done < epochs:
+        try:
+            st = tr.train_epoch()
+        except FaultInjected:
+            killed += 1
+            # the in-process SIGKILL: the dead trainer is discarded and a
+            # fresh one (fresh jit caches, fresh presample) picks up from
+            # the newest checkpoint, exactly as a restarted process would
+            tr = Trainer(ds, spec, cfg)
+            ck = tr.resume()
+            assert ck is not None, "kill fired before the first checkpoint"
+            resumed_step = tr.global_step
+            continue
+        start = tr.global_step - len(st.iters)
+        for i, it in enumerate(st.iters):
+            traj[start + i + 1] = (it.loss, it.accuracy)
+        done += 1
+    assert killed == 1 and inj.fired == [
+        ("kill", "build", KILL_AT["epoch"], KILL_AT["batch"])
+    ], f"{source}: kill did not fire exactly once: {inj.fired}"
+    # every step the chaos run recorded matches the clean twin bitwise
+    # (the killed epoch's pre-kill steps are checkpointed, not recorded)
+    assert traj and max(traj) == max(clean_traj)
+    for gs, pt in traj.items():
+        assert pt == clean_traj[gs], (
+            f"{source}: step {gs} diverged after resume: "
+            f"{pt} != {clean_traj[gs]}"
+        )
+    assert _tree_equal(tr.params, clean_tr.params), (
+        f"{source}: resumed params differ from uninterrupted run"
+    )
+    assert _tree_equal(tr.opt_state, clean_tr.opt_state), (
+        f"{source}: resumed optimizer state differs from uninterrupted run"
+    )
+    return resumed_step, len(list_checkpoints(root))
+
+
+# --------------------------------------------------------------------- #
+# gate 2: transient faults recover inside the retry budget, zero recompiles
+# --------------------------------------------------------------------- #
+def _gate_transient(ds, spec, clean_traj, clean_misses, epochs):
+    inj = FaultInjector(
+        schedule=[FaultAction("transient", epoch=1, batch=1, times=2)]
+    )
+    cfg = _cfg("pipelined", plan_retries=3, plan_retry_backoff_s=0.01)
+    tr = Trainer(ds, spec, cfg, injector=inj)
+    retries = 0
+    misses: list[int] = []
+    traj: dict[int, tuple[float, float]] = {}
+    for _ in range(epochs):
+        st = tr.train_epoch()
+        retries += int(st.pipeline.get("retries", 0))
+        misses.append(int(st.recompiles.get("misses", 0)))
+        start = tr.global_step - len(st.iters)
+        for i, it in enumerate(st.iters):
+            traj[start + i + 1] = (it.loss, it.accuracy)
+    assert retries == 2 and len(inj.fired) == 2, (
+        f"expected exactly the 2 injected retries, got {retries} "
+        f"(fired={inj.fired})"
+    )
+    assert traj == clean_traj, "transient recovery changed the trajectory"
+    # a retried build re-runs the same pure function of (seed, epoch,
+    # batch): shapes and signatures match, so recovery adds not one
+    # recompile beyond the clean twin's warmup schedule
+    assert misses == clean_misses, (
+        f"retry recovery changed the recompile schedule: {misses} != "
+        f"clean {clean_misses}"
+    )
+    return retries
+
+
+# --------------------------------------------------------------------- #
+# gate 3: a crashed producer thread is respawned, its batch requeued
+# --------------------------------------------------------------------- #
+def _gate_crash_respawn(ds, spec, clean_traj, epochs):
+    inj = FaultInjector(schedule=[FaultAction("crash", epoch=1, batch=0)])
+    tr = Trainer(ds, spec, _cfg("pipelined"), injector=inj)
+    crashes = respawns = 0
+    traj: dict[int, tuple[float, float]] = {}
+    for _ in range(epochs):
+        st = tr.train_epoch()
+        crashes += int(st.pipeline.get("worker_crashes", 0))
+        respawns += int(st.pipeline.get("respawns", 0))
+        start = tr.global_step - len(st.iters)
+        for i, it in enumerate(st.iters):
+            traj[start + i + 1] = (it.loss, it.accuracy)
+    assert crashes == 1 and respawns == 1, (
+        f"expected 1 crash + 1 respawn, got {crashes}/{respawns}"
+    )
+    assert traj == clean_traj, "crash recovery changed the trajectory"
+    return crashes
+
+
+# --------------------------------------------------------------------- #
+# gate 4a: corruption detected, previous-good fallback
+# --------------------------------------------------------------------- #
+def _gate_corruption(ds, spec, tmpdir):
+    root = os.path.join(tmpdir, "corrupt")
+    tr = Trainer(ds, spec, _cfg("serial", ckpt_dir=root, ckpt_every=1))
+    tr.train_epoch()
+    cks = list_checkpoints(root)
+    assert len(cks) >= 3, f"need >=3 checkpoints to corrupt, got {len(cks)}"
+    # byte-flip the newest payload: length intact, only the checksum knows
+    corrupt_checkpoint(cks[-1][1])
+    try:
+        load_checkpoint(cks[-1][1], tr.params, tr.opt_state)
+        raise AssertionError("byte-flipped checkpoint loaded cleanly")
+    except CheckpointError:
+        pass
+    ck = load_latest_checkpoint(root, tr.params, tr.opt_state)
+    assert ck is not None and ck.step == cks[-2][0], (
+        f"fallback skipped to {ck and ck.step}, wanted {cks[-2][0]}"
+    )
+    # tear the fallback too (truncated write): falls back another level
+    truncate_checkpoint(cks[-2][1])
+    ck2 = load_latest_checkpoint(root, tr.params, tr.opt_state)
+    assert ck2 is not None and ck2.step == cks[-3][0], (
+        f"double fallback reached {ck2 and ck2.step}, wanted {cks[-3][0]}"
+    )
+    return len(cks)
+
+
+# --------------------------------------------------------------------- #
+# gate 4b: a stalled producer trips the watchdog within the timeout
+# --------------------------------------------------------------------- #
+def _gate_watchdog(ds, spec):
+    inj = FaultInjector(
+        schedule=[FaultAction("delay", epoch=0, batch=1, delay_s=3.0)]
+    )
+    cfg = _cfg("pipelined", stall_timeout_s=0.5)
+    tr = Trainer(ds, spec, cfg, injector=inj)
+    try:
+        tr.train_epoch()
+        raise AssertionError("3.0s stall never tripped the 0.5s watchdog")
+    except PipelineStallError as e:
+        assert e.index == 1, f"watchdog named index {e.index}, stall is at 1"
+        assert 0.5 <= e.waited_s < 2.0, (
+            f"watchdog fired after {e.waited_s:.2f}s, timeout is 0.5s"
+        )
+        assert "index 1" in str(e) and e.live_threads, str(e)
+        return e.waited_s
+
+
+def run(smoke=True, dataset="tiny", epochs=2) -> list[Row]:
+    ds = make_dataset(dataset)
+    spec = _spec(ds)
+    rows: list[Row] = []
+    tmpdir = tempfile.mkdtemp(prefix="chaos_smoke_")
+
+    clean = {s: _clean_run(ds, spec, s, epochs) for s in SOURCES}
+
+    for source in SOURCES:
+        clean_tr, clean_traj, _ = clean[source]
+        t0 = time.perf_counter()
+        resumed_step, n_ckpts = _gate_kill_resume(
+            ds, spec, source, clean_tr, clean_traj, epochs, tmpdir
+        )
+        rows.append(
+            Row(
+                f"chaos/{dataset}/{source}/kill_resume",
+                (time.perf_counter() - t0) * 1e6,
+                f"resumed_at_step={resumed_step} ckpts={n_ckpts} "
+                f"trajectory=bitwise params=bitwise opt_state=bitwise",
+            )
+        )
+
+    t0 = time.perf_counter()
+    retries = _gate_transient(
+        ds, spec, clean["pipelined"][1], clean["pipelined"][2], epochs
+    )
+    rows.append(
+        Row(
+            f"chaos/{dataset}/pipelined/transient_retry",
+            (time.perf_counter() - t0) * 1e6,
+            f"injected=2 retries={retries} trajectory=bitwise "
+            f"extra_recompiles=0",
+        )
+    )
+
+    t0 = time.perf_counter()
+    crashes = _gate_crash_respawn(ds, spec, clean["pipelined"][1], epochs)
+    rows.append(
+        Row(
+            f"chaos/{dataset}/pipelined/crash_respawn",
+            (time.perf_counter() - t0) * 1e6,
+            f"crashes={crashes} respawns={crashes} trajectory=bitwise",
+        )
+    )
+
+    t0 = time.perf_counter()
+    n_ckpts = _gate_corruption(ds, spec, tmpdir)
+    rows.append(
+        Row(
+            f"chaos/{dataset}/checkpoint_corruption",
+            (time.perf_counter() - t0) * 1e6,
+            f"ckpts={n_ckpts} byteflip=detected truncation=detected "
+            f"fallback=previous_good",
+        )
+    )
+
+    t0 = time.perf_counter()
+    waited = _gate_watchdog(ds, spec)
+    rows.append(
+        Row(
+            f"chaos/{dataset}/pipelined/stall_watchdog",
+            (time.perf_counter() - t0) * 1e6,
+            f"stall=3.0s timeout=0.5s raised_after={waited:.2f}s "
+            f"diagnostics=index+threads+occupancy",
+        )
+    )
+    return rows
+
+
+def main() -> None:
+    """CLI entry; the same checks run as the ``chaos_smoke`` CI gate."""
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dataset", default="tiny")
+    ap.add_argument("--epochs", type=int, default=2)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(dataset=args.dataset, epochs=args.epochs):
+        print(row.csv(), flush=True)
+
+
+if __name__ == "__main__":
+    main()

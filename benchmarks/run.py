@@ -2,7 +2,8 @@
 
 Prints ``name,us_per_call,derived`` CSV. Select subsets with
 ``python -m benchmarks.run [table1] [table3] [pipeline] [sampler] [fig5]
-[presample] [kernels] [transformer] [roofline] [overlap_smoke]``.
+[presample] [kernels] [transformer] [roofline] [overlap_smoke]
+[chaos_smoke]``.
 """
 from __future__ import annotations
 
@@ -56,6 +57,17 @@ BENCHES = {
     "obs_smoke": (
         "benchmarks.obs_smoke",
         "§10 — tracing/metrics schema + overhead gate",
+        {"smoke": True},
+    ),
+    # the fault-tolerance gate (docs/ROBUSTNESS.md): deterministic chaos —
+    # kill-and-resume bitwise vs uninterrupted (serial + pipelined),
+    # transient faults recovered inside the retry budget with no extra
+    # recompiles, crashed producers respawned, corrupted checkpoints
+    # detected with previous-good fallback, stalls raising the watchdog
+    # within the timeout; same checks as `python -m benchmarks.chaos_smoke`
+    "chaos_smoke": (
+        "benchmarks.chaos_smoke",
+        "§11 — fault-tolerance chaos smoke gate",
         {"smoke": True},
     ),
     # the splint static-analysis pass over the tree (docs/ANALYSIS.md):

@@ -1,12 +1,13 @@
 """splint: the repo-native static-analysis pass (docs/ANALYSIS.md).
 
-Three checker families over the source tree, all stdlib-AST based — the
+Four checker families over the source tree, all stdlib-AST based — the
 target code is never imported, so the pass runs in milliseconds with no
 jax (or device) in sight:
 
   PL*  plan-lifecycle contracts  (analysis/plan_lifecycle.py)
   HP*  hot-path purity           (analysis/purity.py)
   KC*  kernel contracts          (analysis/kernel_contract.py)
+  FT*  fault handling            (analysis/faults.py)
 
 Run it as ``python -m repro.analysis``; CI gates on the exit code. The
 runtime complement (jit cache-miss counting) lives in
@@ -16,6 +17,7 @@ from __future__ import annotations
 
 from pathlib import Path
 
+from repro.analysis.faults import FaultSpec, check_faults
 from repro.analysis.findings import Baseline, Finding, dedupe, to_json
 from repro.analysis.kernel_contract import KernelSpec, check_kernel_contract
 from repro.analysis.plan_lifecycle import (
@@ -25,7 +27,7 @@ from repro.analysis.plan_lifecycle import (
 )
 from repro.analysis.purity import PuritySpec, check_purity
 
-FAMILIES = ("PL", "HP", "KC")
+FAMILIES = ("PL", "HP", "KC", "FT")
 
 
 def run_all(root: Path, select: tuple[str, ...] = FAMILIES) -> list[Finding]:
@@ -38,6 +40,8 @@ def run_all(root: Path, select: tuple[str, ...] = FAMILIES) -> list[Finding]:
         findings.extend(check_purity(root))
     if "KC" in select:
         findings.extend(check_kernel_contract(root))
+    if "FT" in select:
+        findings.extend(check_faults(root))
     return dedupe(findings)
 
 
@@ -45,10 +49,12 @@ __all__ = [
     "Baseline",
     "ContractSpec",
     "FAMILIES",
+    "FaultSpec",
     "Finding",
     "KernelSpec",
     "Leg",
     "PuritySpec",
+    "check_faults",
     "check_kernel_contract",
     "check_plan_lifecycle",
     "check_purity",

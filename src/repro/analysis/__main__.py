@@ -1,6 +1,6 @@
 """CLI for the splint static-analysis pass.
 
-    python -m repro.analysis [--root DIR] [--select PL,HP,KC]
+    python -m repro.analysis [--root DIR] [--select PL,HP,KC,FT]
                              [--format text|json]
                              [--baseline FILE] [--no-baseline]
                              [--write-baseline [--reason TEXT]]
@@ -25,7 +25,7 @@ def main(argv: list[str] | None = None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="repo-native static analysis (plan lifecycle, hot-path "
-        "purity, kernel contracts)",
+        "purity, kernel contracts, fault handling)",
     )
     parser.add_argument(
         "--root", type=Path, default=Path.cwd(), help="project root"

@@ -496,6 +496,35 @@ class EdgeTelemetry:
             if k_e is not None:
                 self._k_e += k_e
 
+    def counters(self) -> dict:
+        """Snapshot the dense counters (pending buffers flushed first).
+
+        The checkpoint cursor carries these so a resumed run's telemetry —
+        and therefore any later ``refine_partition`` feedback — matches an
+        uninterrupted run's. Arrays are copies; safe to hand to ``np.savez``.
+        """
+        with self._lock:
+            vbuf, self._vbuf = self._vbuf, []
+            ebuf, self._ebuf = self._ebuf, []
+            num_batches = self.num_batches
+        self._merge(vbuf, ebuf)
+        with self._dense_lock:
+            return {
+                "k_v": self._k_v.copy(),
+                "k_e": self._k_e.copy(),
+                "num_batches": num_batches,
+            }
+
+    def load_counters(self, counters: dict) -> None:
+        """Restore a ``counters()`` snapshot (checkpoint resume)."""
+        with self._lock:
+            self._vbuf = []
+            self._ebuf = []
+            self.num_batches = int(counters["num_batches"])
+        with self._dense_lock:
+            self._k_v[:] = counters["k_v"]
+            self._k_e[:] = counters["k_e"]
+
     def as_weights(self) -> PresampleWeights:
         """Empirical weights: per-batch appearance rates.
 

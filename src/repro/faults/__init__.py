@@ -1,0 +1,64 @@
+"""repro.faults — the fault-tolerance layer (docs/ROBUSTNESS.md, DESIGN.md §11).
+
+Long-running split-parallel training fails in a handful of recurring ways:
+a producer thread hangs or dies, a host-side stage throws a transient I/O
+error, a crash mid-save corrupts the only checkpoint, one batch's gradients
+go non-finite. This package names those faults as typed exceptions, gives
+the runtime a retry/backoff vocabulary, and ships a *deterministic*
+fault-injection harness so every recovery path is exercised by CI rather
+than discovered in production:
+
+  * :mod:`repro.faults.errors`  — the exception taxonomy. ``RetryableError``
+    marks a failure as transient (the supervised prefetcher retries it with
+    exponential backoff); ``WorkerCrash`` simulates hard producer-thread
+    death (the thread exits, its claimed batch is requeued, a supervisor
+    respawns capacity); ``PipelineStallError`` is the consumer watchdog's
+    diagnostic (stuck index, live threads, queue occupancy) raised instead
+    of waiting forever; ``CheckpointError`` covers every checkpoint
+    integrity violation (checksum, treedef, key set, truncation).
+  * :mod:`repro.faults.retry`   — ``RetryPolicy`` (bounded attempts,
+    exponential backoff, no randomized jitter: recovery timing is part of
+    the determinism contract) and ``retry_call`` for host-side stages that
+    want the policy outside the prefetcher.
+  * :mod:`repro.faults.inject`  — schedule-driven chaos hooks: crash a
+    producer at batch k, delay a build by d ms, raise a transient error n
+    times, poison one batch's features (NaN gradients for the
+    ``skip_nonfinite`` guard), truncate/corrupt a checkpoint file. Every
+    action fires at an explicit ``(stage, epoch, batch)`` coordinate, so
+    chaos runs are exactly reproducible (``benchmarks/chaos_smoke.py``).
+
+Checkpointing itself lives in :mod:`repro.train.checkpoint` (crash-consistent
+temp-then-``os.replace`` with a content checksum); the supervised producer
+pipeline in :mod:`repro.runtime.prefetch`. This package deliberately imports
+neither — it is the leaf both depend on.
+"""
+from __future__ import annotations
+
+from repro.faults.errors import (
+    CheckpointError,
+    FaultInjected,
+    PipelineStallError,
+    RetryableError,
+    WorkerCrash,
+)
+from repro.faults.inject import (
+    FaultAction,
+    FaultInjector,
+    corrupt_checkpoint,
+    truncate_checkpoint,
+)
+from repro.faults.retry import RetryPolicy, retry_call
+
+__all__ = [
+    "CheckpointError",
+    "FaultAction",
+    "FaultInjected",
+    "FaultInjector",
+    "PipelineStallError",
+    "RetryPolicy",
+    "RetryableError",
+    "WorkerCrash",
+    "corrupt_checkpoint",
+    "retry_call",
+    "truncate_checkpoint",
+]

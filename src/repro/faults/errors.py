@@ -1,0 +1,93 @@
+"""The fault taxonomy shared by the runtime, the trainer, and the harness.
+
+Kept dependency-free (stdlib only): ``repro.runtime.prefetch`` and
+``repro.train.checkpoint`` both import from here, and this module must never
+import back into them.
+"""
+from __future__ import annotations
+
+
+class RetryableError(Exception):
+    """A failure marked *transient*: safe to retry the same work.
+
+    Producer stages (sampling, splitting, feature I/O) are pure functions of
+    ``(seed, epoch, batch)`` under the keyed-RNG discipline (DESIGN.md §6),
+    so re-running a failed build yields the identical batch — which is what
+    makes retry *correct* and not just convenient. Wrap the underlying cause:
+
+        raise RetryableError("shard read failed") from os_error
+
+    Only this type (and subclasses) is retried by the supervised prefetcher;
+    anything else is delivered to the consumer at the failing index exactly
+    as before (fail fast on programming errors, retry only declared
+    transients).
+    """
+
+
+class WorkerCrash(BaseException):
+    """Simulated hard death of a producer thread (fault injection).
+
+    Deliberately a ``BaseException`` so the prefetcher's result-capturing
+    ``except`` (which delivers ordinary failures to the consumer) does not
+    swallow it: the worker thread unwinds and exits as if it had been killed,
+    its claimed index is requeued, and the consumer-side supervisor respawns
+    a replacement (``OrderedPrefetcher``). Production code never raises this;
+    only :class:`repro.faults.inject.FaultInjector` does.
+    """
+
+
+class PipelineStallError(RuntimeError):
+    """The consumer watchdog fired: a batch failed to arrive in time.
+
+    Raised by ``OrderedPrefetcher`` after ``stall_timeout_s`` of waiting on
+    one index, instead of blocking the epoch forever. The message is the
+    diagnostic: the stuck index, how long the consumer waited, which worker
+    threads are still alive, reorder-queue occupancy, and how far the
+    claim cursor ran ahead — enough to tell a dead pool from a slow build
+    from a lost requeue without attaching a debugger.
+    """
+
+    def __init__(
+        self,
+        index: int,
+        waited_s: float,
+        live_threads: list[str],
+        occupancy: int,
+        next_claim: int,
+        delivered: int,
+    ):
+        self.index = index
+        self.waited_s = waited_s
+        self.live_threads = list(live_threads)
+        self.occupancy = occupancy
+        self.next_claim = next_claim
+        self.delivered = delivered
+        super().__init__(
+            f"prefetch stalled waiting for index {index}: no result after "
+            f"{waited_s:.1f}s (stall_timeout_s exceeded); "
+            f"live producer threads: {live_threads or ['<none>']}, "
+            f"reorder-queue occupancy {occupancy}, claim cursor at "
+            f"{next_claim}, {delivered} delivered so far"
+        )
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint failed an integrity check (never silently ignored).
+
+    Raised for: content-checksum mismatch, truncated/unreadable arrays, a
+    manifest whose ``treedef`` does not match the restore template, a key
+    set that differs from the template's, or a missing/garbled manifest.
+    ``load_latest_checkpoint`` catches this per-directory and falls back to
+    the previous good checkpoint; a direct ``load_checkpoint`` call
+    propagates it.
+    """
+
+
+class FaultInjected(Exception):
+    """A non-retryable injected failure (simulated process kill).
+
+    The chaos harness raises this from a scheduled ``crash`` action: it is
+    *not* a ``RetryableError``, so the pipeline delivers it to the consumer
+    at the failing index and the training loop unwinds — the in-process
+    stand-in for SIGKILL used by the kill-and-resume determinism gate.
+    """

@@ -1,0 +1,164 @@
+"""Deterministic fault injection: schedule-driven chaos hooks.
+
+A :class:`FaultInjector` carries a list of :class:`FaultAction` entries,
+each pinned to an exact ``(stage, epoch, batch)`` coordinate. Hook points in
+the runtime (today: ``PlanProducer.build`` under stage ``"build"``) call
+``fire`` / ``maybe_poison``; when nothing matches, both are cheap no-ops.
+Because the coordinates are explicit and the keyed-RNG discipline makes
+every batch a pure function of ``(seed, epoch, batch)``, a chaos run is as
+reproducible as a clean one: the same faults hit the same batches every
+time, which is what lets ``benchmarks/chaos_smoke.py`` assert *bitwise*
+outcomes (recovered trajectory equals the clean trajectory) rather than
+"it didn't crash".
+
+Action kinds
+------------
+  ``transient``  raise :class:`RetryableError` (retried under the policy);
+                 fires on the first ``times`` attempts, then succeeds —
+                 ``times`` must be <= the retry budget for recovery.
+  ``crash``      raise :class:`WorkerCrash`: the producer thread dies, its
+                 batch is requeued, the supervisor respawns a worker.
+  ``kill``       raise :class:`FaultInjected`: a non-retryable failure
+                 delivered to the consumer — the in-process SIGKILL used by
+                 the kill-and-resume gate.
+  ``delay``      sleep ``delay_s`` before the stage runs (watchdog food).
+  ``poison``     overwrite one staged feature entry with NaN via
+                 ``maybe_poison`` — gradients go non-finite, exercising the
+                 trainer's ``skip_nonfinite`` guard.
+
+Checkpoint corruption (``corrupt_checkpoint`` / ``truncate_checkpoint``)
+is file-level and needs no schedule: the harness calls it directly between
+saves to prove detection + previous-good fallback.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.faults.errors import FaultInjected, RetryableError, WorkerCrash
+
+_KINDS = ("transient", "crash", "kill", "delay", "poison")
+
+
+@dataclass(frozen=True)
+class FaultAction:
+    """One scheduled fault at an exact pipeline coordinate."""
+
+    kind: str  # transient | crash | kill | delay | poison
+    stage: str = "build"  # hook-point name (PlanProducer.build fires "build")
+    epoch: int = 0
+    batch: int = 0
+    times: int = 1  # firings before the coordinate goes quiet
+    delay_s: float = 0.0  # kind="delay": seconds to stall the stage
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} ({_KINDS})")
+        if self.times < 1:
+            raise ValueError("times must be >= 1")
+
+
+@dataclass
+class FaultInjector:
+    """Fires scheduled faults; thread-safe, exactly-``times``-per-action.
+
+    ``fired`` records every firing as ``(kind, stage, epoch, batch)`` in
+    fire order — the assertion surface for tests and the chaos harness.
+    """
+
+    schedule: list = field(default_factory=list)  # [FaultAction]
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    _counts: dict = field(default_factory=dict, repr=False)
+    fired: list = field(default_factory=list)
+
+    def _take(self, action: FaultAction) -> bool:
+        """Claim one firing of ``action`` (False once ``times`` exhausted)."""
+        key = (action.kind, action.stage, action.epoch, action.batch)
+        with self._lock:
+            n = self._counts.get(key, 0)
+            if n >= action.times:
+                return False
+            self._counts[key] = n + 1
+            self.fired.append(key)
+            return True
+
+    def _matches(self, stage: str, epoch: int, batch: int, kinds=None):
+        for a in self.schedule:
+            if a.stage != stage or a.epoch != epoch or a.batch != batch:
+                continue
+            if kinds is not None and a.kind not in kinds:
+                continue
+            yield a
+
+    def fire(self, stage: str, epoch: int, batch: int) -> None:
+        """Raise/sleep any scheduled fault at this coordinate.
+
+        Order when several match: delays run first (a slow-then-failing
+        stage is the realistic compound), then transient, then crash/kill.
+        """
+        for a in self._matches(stage, epoch, batch, kinds=("delay",)):
+            if self._take(a):
+                time.sleep(a.delay_s)
+        for a in self._matches(stage, epoch, batch, kinds=("transient",)):
+            if self._take(a):
+                raise RetryableError(
+                    f"injected transient fault at {stage}/{epoch}/{batch}"
+                )
+        for a in self._matches(stage, epoch, batch, kinds=("crash",)):
+            if self._take(a):
+                raise WorkerCrash(
+                    f"injected worker crash at {stage}/{epoch}/{batch}"
+                )
+        for a in self._matches(stage, epoch, batch, kinds=("kill",)):
+            if self._take(a):
+                raise FaultInjected(
+                    f"injected kill at {stage}/{epoch}/{batch}"
+                )
+
+    def maybe_poison(
+        self, stage: str, epoch: int, batch: int, feats: np.ndarray
+    ) -> np.ndarray:
+        """NaN-poison one staged feature block if scheduled (else identity).
+
+        Writes NaN into the block's first element on a *copy*, so the
+        producer's source arrays are never mutated — the poisoned batch
+        produces a non-finite loss/gradient on device, which is the
+        ``skip_nonfinite`` guard's trigger.
+        """
+        for a in self._matches(stage, epoch, batch, kinds=("poison",)):
+            if self._take(a):
+                feats = np.array(feats, copy=True)
+                feats.reshape(-1)[0] = np.nan
+        return feats
+
+
+# --------------------------------------------------------------------- #
+# checkpoint corruption (file-level chaos, no schedule needed)
+# --------------------------------------------------------------------- #
+def corrupt_checkpoint(ckpt_dir: str, filename: str = "params.npz") -> None:
+    """Flip one byte in the middle of a checkpoint payload file.
+
+    Leaves the file length intact — only the content checksum can catch
+    this, which is exactly what the detection gate asserts.
+    """
+    path = os.path.join(ckpt_dir, filename)
+    size = os.path.getsize(path)
+    if size == 0:
+        raise ValueError(f"{path} is empty — nothing to corrupt")
+    with open(path, "r+b") as f:
+        f.seek(size // 2)
+        b = f.read(1)
+        f.seek(size // 2)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+
+def truncate_checkpoint(ckpt_dir: str, filename: str = "params.npz") -> None:
+    """Truncate a checkpoint payload to half its length (torn write)."""
+    path = os.path.join(ckpt_dir, filename)
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size // 2)

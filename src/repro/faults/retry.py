@@ -1,0 +1,75 @@
+"""Bounded retry with exponential backoff for transient host-side faults.
+
+One policy object, two consumers: ``OrderedPrefetcher`` applies it inline in
+its worker loop (so a retried build never loses its queue ticket or its
+delivery slot), and standalone host stages can wrap themselves with
+``retry_call``. Backoff is deterministic — ``base * mult**attempt`` with no
+randomized jitter — because chaos runs assert on recovery behavior and the
+repo's determinism contract extends to its failure handling. The producer
+pool is small (2–4 threads), so the thundering-herd case jitter exists for
+does not apply.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable
+
+from repro.faults.errors import RetryableError
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """How many times to retry a ``RetryableError`` and how long to wait.
+
+    ``retries`` is the number of *re*-attempts after the first failure
+    (0 = fail immediately, the default everywhere). Sleep before re-attempt
+    ``k`` (1-based) is ``backoff_s * backoff_mult ** (k - 1)``, capped at
+    ``max_backoff_s``.
+    """
+
+    retries: int = 0
+    backoff_s: float = 0.05
+    backoff_mult: float = 2.0
+    max_backoff_s: float = 2.0
+
+    def delay_s(self, attempt: int) -> float:
+        """Backoff before re-attempt ``attempt`` (1-based)."""
+        return min(
+            self.backoff_s * self.backoff_mult ** (attempt - 1),
+            self.max_backoff_s,
+        )
+
+
+def retry_call(
+    fn: Callable[[], Any],
+    policy: RetryPolicy,
+    on_retry: Callable[[int, BaseException], None] | None = None,
+    cancel: threading.Event | None = None,
+) -> Any:
+    """Run ``fn()`` under ``policy``: transient failures sleep and retry.
+
+    Only :class:`RetryableError` is retried; any other exception propagates
+    immediately. ``on_retry(attempt, err)`` is called before each backoff
+    sleep (attempt is 1-based) — the hook the prefetcher uses to count
+    retries into its stats and the ``fault/*`` metrics. ``cancel`` (when
+    given) makes the backoff sleep interruptible: if it is set mid-wait the
+    last error is re-raised instead of re-attempting, so a closing pipeline
+    never blocks on a sleeping retry.
+    """
+    attempt = 0
+    while True:
+        try:
+            return fn()
+        except RetryableError as e:
+            attempt += 1
+            if attempt > policy.retries:
+                raise
+            if on_retry is not None:
+                on_retry(attempt, e)
+            delay = policy.delay_s(attempt)
+            if cancel is not None:
+                if cancel.wait(delay):
+                    raise
+            else:
+                threading.Event().wait(delay)

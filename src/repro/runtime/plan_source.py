@@ -43,6 +43,7 @@ from repro.core.splitting import (
     pad_axis,
     repad_plan,
 )
+from repro.faults.retry import RetryPolicy
 from repro.graph.cache import CachePlan, FeatureCache, LoadBreakdown
 from repro.graph.sampling import NeighborSampler
 from repro.obs import NULL_OBS, Obs, note_hwm_growth
@@ -132,6 +133,7 @@ class PlanProducer:
         telemetry=None,  # core.partition.EdgeTelemetry | None
         num_replicas: int = 0,  # 0 = 1D path; >=1 = (R, P) mesh fan-out
         obs: Obs = NULL_OBS,  # tracing/metrics sink (repro.obs)
+        injector=None,  # repro.faults.FaultInjector | None (chaos hooks)
     ):
         if mode not in ("split", "dp", "pushpull"):
             raise ValueError(f"unknown mode {mode!r}")
@@ -162,10 +164,15 @@ class PlanProducer:
         self.telemetry = telemetry
         self.num_replicas = num_replicas
         self.obs = obs
+        self.injector = injector
 
     def build(self, epoch: int, index: int, targets: np.ndarray):
         from repro.train.plan_io import load_labels, stage_host_features
 
+        if self.injector is not None:
+            # deterministic chaos hook (repro.faults.inject): raises the
+            # scheduled fault / sleeps the scheduled delay, or no-ops
+            self.injector.fire("build", epoch, index)
         if self.num_replicas >= 1:
             return self._build_mesh(epoch, index, targets)
         obs = self.obs
@@ -209,6 +216,8 @@ class PlanProducer:
                     self.pad_multiple,
                 )
                 labels = load_labels(plan, self.labels)
+            if self.injector is not None:
+                feats = self.injector.maybe_poison("build", epoch, index, feats)
             # the producer end of the flow arrow that lands on the consumer
             # step training on this plan (keyed by the plan's (epoch, batch))
             obs.flow_start(("plan", epoch, index))
@@ -293,6 +302,11 @@ class PlanProducer:
                         self.pad_multiple,
                     )
                     labels = load_labels(plan, self.labels)
+                if self.injector is not None:
+                    # _take claims once, so at most one replica is poisoned
+                    feats = self.injector.maybe_poison(
+                        "build", epoch, index, feats
+                    )
                 t_split += sp_split.duration
                 t_load += sp_load.duration
                 parts.append(
@@ -473,11 +487,16 @@ class SerialPlanSource(PlanSource):
     # every delivered signature — see ``plan_signature``
     sig_extra: tuple = ()
     obs: Obs = NULL_OBS
+    # first batch's *global* epoch index: a mid-epoch resume slices
+    # ``batches`` to the tail but must key each build by its original
+    # (epoch, index) coordinate so the keyed RNG reproduces the exact
+    # draws an uninterrupted run would make (docs/ROBUSTNESS.md)
+    start: int = 0
 
     def __iter__(self) -> Iterator[PlanBatch]:
         for idx, targets in enumerate(self.batches):
             yield _finalize(
-                self.producer.build(self.epoch, idx, targets),
+                self.producer.build(self.epoch, idx + self.start, targets),
                 self.hwm,
                 self.sig_cache,
                 self.sig_extra,
@@ -499,8 +518,14 @@ class PipelinedPlanSource(PlanSource):
     sig_cache: SignatureCache | None = None
     sig_extra: tuple = ()
     obs: Obs = NULL_OBS
+    start: int = 0  # global index of batches[0] (see SerialPlanSource)
     depth: int = 4
     workers: int = 2
+    # producer supervision (docs/ROBUSTNESS.md): transient-build retry
+    # budget and the consumer-side stall watchdog, both forwarded to
+    # OrderedPrefetcher
+    retry: RetryPolicy | None = None
+    stall_timeout_s: float | None = None
     _prefetcher: OrderedPrefetcher | None = field(
         default=None, repr=False, compare=False
     )
@@ -509,10 +534,16 @@ class PipelinedPlanSource(PlanSource):
         batches = list(self.batches)
 
         def build(idx: int) -> PlanBatch:
-            return self.producer.build(self.epoch, idx, batches[idx])
+            return self.producer.build(self.epoch, idx + self.start, batches[idx])
 
         self._prefetcher = OrderedPrefetcher(
-            build, len(batches), depth=self.depth, workers=self.workers
+            build,
+            len(batches),
+            depth=self.depth,
+            workers=self.workers,
+            retry=self.retry,
+            stall_timeout_s=self.stall_timeout_s,
+            obs=self.obs,
         )
         try:
             for batch in self._prefetcher:
@@ -587,24 +618,27 @@ def make_plan_source(
     workers: int = 2,
     sig_extra: tuple = (),
     obs: Obs = NULL_OBS,
+    start: int = 0,
+    retry: RetryPolicy | None = None,
+    stall_timeout_s: float | None = None,
 ) -> PlanSource:
     if kind == "serial":
         return SerialPlanSource(
-            producer, epoch, batches, hwm, sig_cache, sig_extra, obs
+            producer, epoch, batches, hwm, sig_cache, sig_extra, obs, start
         )
     if kind == "pipelined":
         return PipelinedPlanSource(
-            producer, epoch, batches, hwm, sig_cache, sig_extra, obs,
-            depth, workers,
+            producer, epoch, batches, hwm, sig_cache, sig_extra, obs, start,
+            depth, workers, retry, stall_timeout_s,
         )
     if kind == "device":
         return DevicePlanSource(
-            producer, epoch, batches, hwm, sig_cache, sig_extra, obs
+            producer, epoch, batches, hwm, sig_cache, sig_extra, obs, start
         )
     if kind == "device_pipelined":
         return DevicePipelinedPlanSource(
-            producer, epoch, batches, hwm, sig_cache, sig_extra, obs,
-            depth, workers,
+            producer, epoch, batches, hwm, sig_cache, sig_extra, obs, start,
+            depth, workers, retry, stall_timeout_s,
         )
     raise ValueError(
         f"unknown plan source {kind!r} "

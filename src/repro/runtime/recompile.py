@@ -31,7 +31,7 @@ def cache_size(fn) -> int | None:
         return None
     try:
         return int(probe())
-    except Exception:
+    except Exception:  # FT001: optional-API probe — None IS the answer
         return None
 
 

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core.shuffle import sim_alltoall, spmd_alltoall
 from repro.graph.csr import CSRGraph
+from repro.obs import NULL_OBS
 from repro.graph.sampling import (
     LayerSample,
     MiniBatchSample,
@@ -296,6 +297,8 @@ class DeviceSampler:
         self.hwm: dict[str, int] = {}
         self._pending: dict[str, int] = {}
         self._caps = self._calibrate(headroom)
+        # tracing/metrics sink; the trainer re-points this at its own Obs
+        self.obs = NULL_OBS
 
     @property
     def num_devices(self) -> int:
@@ -419,6 +422,14 @@ class DeviceSampler:
                         self._pending.get(k, 0), 2 * dict(caps)[k]
                     )
         if overflowed:
+            # the fallback is benign (identical keyed draw on the host) but
+            # must never be *silent*: it means caps were undersized and the
+            # batch paid the host-sampling price
+            self.obs.count("fault/sampler_fallback", 1)
+            self.obs.instant(
+                "fault/sampler_fallback",
+                {"epoch": epoch, "batch": key_batch, "caps": overflowed},
+            )
             return self.host.sample_batch(targets, epoch, key_batch)
         return self._assemble(targets, fronts, counts, layers)
 
@@ -459,6 +470,34 @@ class DeviceSampler:
                 self._caps[k] = max(self._caps[k], v)
             self._pending.clear()
             self._epoch_base = (self.batches, self.fallbacks)
+
+    def export_state(self) -> dict:
+        """JSON-able capacity/counter state for the checkpoint cursor.
+
+        Caps, pending growth, and the fallback bookkeeping are part of the
+        resume contract in device mode: which batches overflow (and so fall
+        back to the host sampler) depends on the capacity table, so a
+        bit-exact resume must restore it rather than recalibrate.
+        """
+        with self._lock:
+            return {
+                "caps": {k: int(v) for k, v in self._caps.items()},
+                "pending": {k: int(v) for k, v in self._pending.items()},
+                "hwm": {k: int(v) for k, v in self.hwm.items()},
+                "batches": int(self.batches),
+                "fallbacks": int(self.fallbacks),
+                "epoch_base": list(self._epoch_base),
+            }
+
+    def load_state(self, state: dict) -> None:
+        """Restore ``export_state`` output (checkpoint resume)."""
+        with self._lock:
+            self._caps = {k: int(v) for k, v in state["caps"].items()}
+            self._pending = {k: int(v) for k, v in state["pending"].items()}
+            self.hwm = {k: int(v) for k, v in state["hwm"].items()}
+            self.batches = int(state["batches"])
+            self.fallbacks = int(state["fallbacks"])
+            self._epoch_base = tuple(int(x) for x in state["epoch_base"])
 
     def stats(self) -> dict:
         """Counters + capacity state. ``sampler_batches``/``sampler_fallbacks``

@@ -17,6 +17,8 @@ how GSplit's layer-centric API reuses single-GPU kernels (paper §6).
 """
 from __future__ import annotations
 
+import logging
+import os
 import time
 from dataclasses import dataclass, field
 
@@ -25,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.splitting import pad_axis, repad_plan
+from repro.faults.retry import RetryPolicy
 from repro.core import (
     build_dp_plan,
     build_split_plan,
@@ -47,6 +50,11 @@ from repro.runtime import (
 )
 from repro.runtime.plan_source import finalize_cache_plan
 from repro.train import optimizer as opt_lib
+from repro.train.checkpoint import (
+    checkpoint_name,
+    load_latest_checkpoint,
+    save_checkpoint as _save_checkpoint,
+)
 from repro.train.loss import masked_softmax_xent, masked_accuracy
 from repro.train.plan_io import (
     load_labels,
@@ -126,8 +134,35 @@ class TrainConfig:
     # across the replica axis. R = 1 is the degenerate mesh, pinned
     # bit-identical to the 1D path by tests/test_mesh.py. Split mode only.
     num_replicas: int = 0
+    # ---- fault tolerance (repro.faults, docs/ROBUSTNESS.md) --------------
+    # Crash-consistent checkpointing: with ckpt_dir set and ckpt_every > 0,
+    # train_epoch writes a versioned checkpoint (params + optimizer state +
+    # the full resume cursor) every ckpt_every optimizer steps;
+    # Trainer.resume() restarts from the newest valid one mid-epoch,
+    # bit-for-bit against an uninterrupted run.
+    ckpt_dir: str | None = None
+    ckpt_every: int = 0  # optimizer steps between checkpoints (0 = off)
+    # Supervised producer pipeline (pipelined sources): transient build
+    # failures (faults.RetryableError) retry in place up to plan_retries
+    # times with exponential backoff; a delivery blocked longer than
+    # stall_timeout_s raises faults.PipelineStallError naming the stuck
+    # index instead of hanging the epoch. None = no watchdog.
+    plan_retries: int = 0
+    plan_retry_backoff_s: float = 0.05
+    stall_timeout_s: float | None = None
+    # Non-finite guard: detect NaN/Inf loss or gradients on device (one
+    # fused isfinite reduction inside the existing jitted step — no extra
+    # host sync) and skip that batch's optimizer update, counting
+    # fault/nonfinite_skips. Determinism note: a skipped batch still
+    # advances every RNG stream and the loss/acc it *reports* are the
+    # non-finite values, so two runs with identical data remain bit-exact;
+    # the guard changes the trajectory only on batches that would have
+    # poisoned the params anyway.
+    skip_nonfinite: bool = False
     seed: int = 0
 
+
+log = logging.getLogger("repro.trainer")
 
 #: wire bytes per element for each supported wire dtype (DESIGN.md §3a)
 _WIRE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2}
@@ -235,7 +270,13 @@ class EpochStats:
 class Trainer:
     """End-to-end mini-batch GNN training with the chosen parallelism."""
 
-    def __init__(self, dataset: GraphDataset, spec: GNNSpec, cfg: TrainConfig):
+    def __init__(
+        self,
+        dataset: GraphDataset,
+        spec: GNNSpec,
+        cfg: TrainConfig,
+        injector=None,  # repro.faults.FaultInjector | None (chaos hooks)
+    ):
         from dataclasses import replace
 
         from repro.core.shuffle import WIRE_DTYPES
@@ -352,6 +393,10 @@ class Trainer:
             )
         self._pad_hwm: dict = {}  # high-water-mark padding (stable jit sigs)
         self._epoch = 0  # epochs consumed via train_epoch (keyed RNG input)
+        self._start_iter = 0  # resume cursor: first batch of the next epoch
+        self.global_step = 0  # optimizer steps taken (checkpoint naming)
+        self.nonfinite_skips = 0  # batches whose update the guard skipped
+        self.injector = injector
         self.sig_cache = SignatureCache()
         self.device_sampler = None
         if cfg.plan_source in ("device", "device_pipelined"):
@@ -369,6 +414,7 @@ class Trainer:
                 backend=cfg.sampler_backend,
                 interpret=cfg.sampler_interpret,
             )
+            self.device_sampler.obs = self.obs
         self.recompiles = None
         if cfg.trace_recompiles:
             from repro.runtime.recompile import RecompileTracer
@@ -401,17 +447,25 @@ class Trainer:
             telemetry=self.telemetry,
             num_replicas=cfg.num_replicas,
             obs=self.obs,
+            injector=injector,
         )
 
     # ------------------------------------------------------------------ #
     def _build_step(self):
         spec, opt = self.spec, self.opt
+        skip_nonfinite = self.cfg.skip_nonfinite  # static: fixed return arity
 
         def make_step(forward_fn):
             """One jitted update step; ``inputs`` is the feature pytree —
             a (P, N_L, F) block, or (cache_block, miss_feats) when served.
             One factory guarantees cached and uncached steps share the exact
-            loss/update math (the serving path must never drift)."""
+            loss/update math (the serving path must never drift).
+
+            With ``skip_nonfinite`` the step returns a fifth output — a
+            device bool that is False when the loss or any gradient leaf is
+            non-finite — and the update is a ``where``-select against the
+            old params/opt state, so a poisoned batch costs one fused
+            reduction instead of a host round-trip (docs/ROBUSTNESS.md)."""
 
             def loss_fn(params, inputs, plan_arrays, labels):
                 logits = forward_fn(params, inputs, plan_arrays)
@@ -420,15 +474,40 @@ class Trainer:
                 acc = masked_accuracy(logits, labels, mask)
                 return loss, acc
 
-            @jax.jit
-            def step(params, opt_state, inputs, plan_arrays, labels):
-                (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                    params, inputs, plan_arrays, labels
-                )
-                params, opt_state = opt.update(grads, opt_state, params)
-                return params, opt_state, loss, acc
+            if not skip_nonfinite:
 
-            return step
+                @jax.jit
+                def step(params, opt_state, inputs, plan_arrays, labels):
+                    (loss, acc), grads = jax.value_and_grad(
+                        loss_fn, has_aux=True
+                    )(params, inputs, plan_arrays, labels)
+                    params, opt_state = opt.update(grads, opt_state, params)
+                    return params, opt_state, loss, acc
+
+                return step
+
+            @jax.jit
+            def guarded_step(params, opt_state, inputs, plan_arrays, labels):
+                (loss, acc), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True
+                )(params, inputs, plan_arrays, labels)
+                finite = jnp.isfinite(loss)
+                for leaf in jax.tree_util.tree_leaves(grads):
+                    finite = finite & jnp.all(jnp.isfinite(leaf))
+                new_params, new_opt_state = opt.update(
+                    grads, opt_state, params
+                )
+                params = jax.tree_util.tree_map(
+                    lambda new, old: jnp.where(finite, new, old),
+                    new_params, params,
+                )
+                opt_state = jax.tree_util.tree_map(
+                    lambda new, old: jnp.where(finite, new, old),
+                    new_opt_state, opt_state,
+                )
+                return params, opt_state, loss, acc, finite
+
+            return guarded_step
 
         # the replicated block rides in the plan pytree under "rep" (absent
         # when replication is off — dict structure keys the jit trace), so
@@ -464,6 +543,7 @@ class Trainer:
         are the means of the per-replica masked means.
         """
         spec, opt = self.spec, self.opt
+        skip_nonfinite = self.cfg.skip_nonfinite  # static: fixed return arity
 
         def make_step(forward_fn):
             def loss_fn(params, inputs, plan_arrays, labels):
@@ -489,8 +569,28 @@ class Trainer:
                     acc_sum = acc if acc_sum is None else acc_sum + acc
                 num = len(replicas)
                 grads = jax.tree_util.tree_map(lambda t: t / num, grads)
-                params, opt_state = opt.update(grads, opt_state, params)
-                return params, opt_state, loss_sum / num, acc_sum / num
+                if not skip_nonfinite:
+                    params, opt_state = opt.update(grads, opt_state, params)
+                    return params, opt_state, loss_sum / num, acc_sum / num
+                # guard the *averaged* gradient: any replica's NaN/Inf
+                # poisons the mean, so one check covers all R branches
+                finite = jnp.isfinite(loss_sum)
+                for leaf in jax.tree_util.tree_leaves(grads):
+                    finite = finite & jnp.all(jnp.isfinite(leaf))
+                new_params, new_opt_state = opt.update(
+                    grads, opt_state, params
+                )
+                params = jax.tree_util.tree_map(
+                    lambda new, old: jnp.where(finite, new, old),
+                    new_params, params,
+                )
+                opt_state = jax.tree_util.tree_map(
+                    lambda new, old: jnp.where(finite, new, old),
+                    new_opt_state, opt_state,
+                )
+                return (
+                    params, opt_state, loss_sum / num, acc_sum / num, finite
+                )
 
             return mesh_step
 
@@ -514,6 +614,42 @@ class Trainer:
         if self.rep_block is not None:
             plan_arrays["rep"] = self.rep_block
         return plan_arrays
+
+    # ------------------------------------------------------------------ #
+    def _dispatch_step(self, fn, *args):
+        """Dispatch one jitted step and unpack by the configured arity.
+
+        Returns the still-async ``(loss, acc, finite)`` device values;
+        ``finite`` is None when the non-finite guard is off (the step
+        returns 4 outputs) and a device bool when it is on (5 outputs).
+        """
+        out = fn(self.params, self.opt_state, *args)
+        if self.cfg.skip_nonfinite:
+            self.params, self.opt_state, loss, acc, finite = out
+            return loss, acc, finite
+        self.params, self.opt_state, loss, acc = out
+        return loss, acc, None
+
+    def _sync_step(self, loss, acc, finite):
+        """The single designed device sync point: one transfer fetches both
+        scalars — and the finite flag rides the *same* transfer when the
+        guard is on, so detecting a skipped batch costs zero extra syncs."""
+        if finite is None:
+            loss, acc = jax.device_get((loss, acc))
+            return float(loss), float(acc), None
+        loss, acc, finite = jax.device_get((loss, acc, finite))
+        if not bool(finite):
+            self.nonfinite_skips += 1
+            self.obs.count("fault/nonfinite_skips", 1)
+            self.obs.instant(
+                "fault/nonfinite_skip",
+                {"step": self.global_step, "loss": repr(float(loss))},
+            )
+            log.warning(
+                "non-finite loss/gradients at step %d — optimizer update "
+                "skipped (loss=%r)", self.global_step, float(loss),
+            )
+        return float(loss), float(acc), bool(finite)
 
     # ------------------------------------------------------------------ #
     def _plan_for(self, targets: np.ndarray):
@@ -622,21 +758,20 @@ class Trainer:
                     )
                     replicas.append((inputs, plan_arrays, jnp.asarray(labels)))
                 fn = self._mesh_cached_step_fn if cached else self._mesh_step_fn
-                self.params, self.opt_state, loss, acc = fn(
-                    self.params, self.opt_state, tuple(replicas)
-                )
+                loss, acc, finite = self._dispatch_step(fn, tuple(replicas))
             if self.recompiles is not None:
                 self.recompiles.step("train_iter")
             with self.obs.span("step/device") as sp_dev:
-                loss, acc = jax.device_get((loss, acc))
+                loss, acc, finite = self._sync_step(loss, acc, finite)
             step_sp.attrs.update(
                 stage_s=sp_stage.duration, device_s=sp_dev.duration
             )
+        self.global_step += 1
         return self._mesh_iter_stats(
             plans,
             [entry[4] for entry in staged],
-            float(loss),
-            float(acc),
+            loss,
+            acc,
             t_sample,
             t_split,
             sp_load.duration,
@@ -672,16 +807,14 @@ class Trainer:
                     )
                 )
                 if cache_plan is not None:
-                    self.params, self.opt_state, loss, acc = (
-                        self._cached_step_fn(
-                            self.params, self.opt_state,
-                            (self.cache_block, jnp.asarray(feats)),
-                            plan_arrays, jnp.asarray(labels),
-                        )
+                    loss, acc, finite = self._dispatch_step(
+                        self._cached_step_fn,
+                        (self.cache_block, jnp.asarray(feats)),
+                        plan_arrays, jnp.asarray(labels),
                     )
                 else:
-                    self.params, self.opt_state, loss, acc = self._step_fn(
-                        self.params, self.opt_state, jnp.asarray(feats),
+                    loss, acc, finite = self._dispatch_step(
+                        self._step_fn, jnp.asarray(feats),
                         plan_arrays, jnp.asarray(labels),
                     )
             if self.recompiles is not None:
@@ -689,14 +822,15 @@ class Trainer:
             # one transfer for both scalars: float(loss); float(acc) would
             # pay two round-trips to the device
             with self.obs.span("step/device") as sp_dev:
-                loss, acc = jax.device_get((loss, acc))
+                loss, acc, finite = self._sync_step(loss, acc, finite)
             step_sp.attrs.update(
                 stage_s=sp_stage.duration, device_s=sp_dev.duration
             )
+        self.global_step += 1
 
         st = IterStats(
-            loss=float(loss),
-            accuracy=float(acc),
+            loss=loss,
+            accuracy=acc,
             t_sample=t_sample,
             t_split=t_split,
             t_load=sp_load.duration,
@@ -715,11 +849,26 @@ class Trainer:
         return st
 
     # ------------------------------------------------------------------ #
-    def plan_source_for(self, epoch: int, max_iters: int | None = None):
-        """A ``PlanSource`` over the given epoch's batches (keyed RNG)."""
+    def plan_source_for(
+        self, epoch: int, max_iters: int | None = None, start: int = 0
+    ):
+        """A ``PlanSource`` over the given epoch's batches (keyed RNG).
+
+        ``start`` resumes mid-epoch: batches before it are skipped, but
+        every delivered batch keeps its original global index for RNG
+        keying, so the tail of a resumed epoch is bit-identical to the
+        tail of an uninterrupted one.
+        """
         batches = self.sampler.epoch_targets(epoch)
         if max_iters is not None:
             batches = batches[:max_iters]
+        batches = batches[start:]
+        retry = None
+        if self.cfg.plan_retries > 0:
+            retry = RetryPolicy(
+                retries=self.cfg.plan_retries,
+                backoff_s=self.cfg.plan_retry_backoff_s,
+            )
         return make_plan_source(
             self.cfg.plan_source,
             self.producer,
@@ -735,6 +884,9 @@ class Trainer:
                 self.cfg.shuffle_overlap,
             ),
             obs=self.obs,
+            start=start,
+            retry=retry,
+            stall_timeout_s=self.cfg.stall_timeout_s,
         )
 
     def _step_mesh_batch(self, batch: MeshPlanBatch):
@@ -757,14 +909,11 @@ class Trainer:
             inputs = (self.cache_block, feats_d) if cached else feats_d
             replicas.append((inputs, plan_arrays, labels_d))
         fn = self._mesh_cached_step_fn if cached else self._mesh_step_fn
-        self.params, self.opt_state, loss, acc = fn(
-            self.params, self.opt_state, tuple(replicas)
-        )
-        return loss, acc
+        return self._dispatch_step(fn, tuple(replicas))
 
     def _step_batch(self, batch: PlanBatch):
         """Stage a finalized batch to device and dispatch the jitted step.
-        Returns the (still-async) loss/accuracy device values."""
+        Returns the (still-async) ``(loss, acc, finite)`` device values."""
         if isinstance(batch, MeshPlanBatch):
             return self._step_mesh_batch(batch)
         feats_d, plan_arrays, labels_d = stage_batch(
@@ -774,15 +923,13 @@ class Trainer:
         )
         plan_arrays = self._attach_rep(plan_arrays)
         if batch.cache_plan is not None:
-            self.params, self.opt_state, loss, acc = self._cached_step_fn(
-                self.params, self.opt_state, (self.cache_block, feats_d),
+            return self._dispatch_step(
+                self._cached_step_fn, (self.cache_block, feats_d),
                 plan_arrays, labels_d,
             )
-        else:
-            self.params, self.opt_state, loss, acc = self._step_fn(
-                self.params, self.opt_state, feats_d, plan_arrays, labels_d
-            )
-        return loss, acc
+        return self._dispatch_step(
+            self._step_fn, feats_d, plan_arrays, labels_d
+        )
 
     def _mesh_iter_stats(
         self, plans, breakdowns, loss, acc, t_sample, t_split, t_load,
@@ -899,7 +1046,11 @@ class Trainer:
         overlap win.
         """
         stats = EpochStats()
-        source = self.plan_source_for(self._epoch, max_iters)
+        # mid-epoch resume: the cursor's batch offset applies to exactly one
+        # epoch (the one the checkpoint was taken in), then clears
+        start, self._start_iter = self._start_iter, 0
+        source = self.plan_source_for(self._epoch, max_iters, start=start)
+        n_batches = start + len(source.batches)  # this epoch's global count
         mark = self.recompiles.mark() if self.recompiles is not None else None
         t_epoch = time.perf_counter()
         try:
@@ -917,13 +1068,13 @@ class Trainer:
                     # close the flow arrow from this plan's producer span
                     self.obs.flow_end(("plan", batch.epoch, batch.index))
                     with self.obs.span("step/stage") as sp_stage:
-                        loss, acc = self._step_batch(batch)
-                    # one transfer fetches both scalars and blocks until the
-                    # step's results are ready — the epoch loop's single
-                    # designed sync point (float(loss); float(acc) would pay
-                    # two device round-trips)
+                        loss, acc, finite = self._step_batch(batch)
+                    # one transfer fetches both scalars (plus the finite
+                    # flag under skip_nonfinite) and blocks until the step's
+                    # results are ready — the epoch loop's single designed
+                    # sync point
                     with self.obs.span("step/device") as sp_dev:
-                        loss, acc = jax.device_get((loss, acc))
+                        loss, acc, finite = self._sync_step(loss, acc, finite)
                     step_sp.attrs.update(
                         wait_s=sp_wait.duration,
                         stage_s=sp_stage.duration,
@@ -931,10 +1082,23 @@ class Trainer:
                     )
                 stats.iters.append(
                     self._iter_stats(
-                        batch, float(loss), float(acc),
+                        batch, loss, acc,
                         sp_stage.duration + sp_dev.duration,
                     )
                 )
+                self.global_step += 1
+                if (
+                    self.cfg.ckpt_dir
+                    and self.cfg.ckpt_every > 0
+                    and self.global_step % self.cfg.ckpt_every == 0
+                ):
+                    next_batch = batch.index + 1
+                    epoch, next_batch = (
+                        (self._epoch + 1, 0)
+                        if next_batch >= n_batches
+                        else (self._epoch, next_batch)
+                    )
+                    self.save_checkpoint(epoch=epoch, next_batch=next_batch)
                 if self.recompiles is not None:
                     self.recompiles.step(f"epoch{self._epoch}")
                 if stats.t_first_iter == 0.0:
@@ -954,6 +1118,111 @@ class Trainer:
                 self.obs.write(self.cfg.obs_path)
         self._epoch += 1
         return stats
+
+    # ------------------------------------------------------------------ #
+    def save_checkpoint(
+        self,
+        root: str | None = None,
+        epoch: int | None = None,
+        next_batch: int = 0,
+    ) -> str:
+        """Write one crash-consistent checkpoint (params + optimizer state +
+        the full resume cursor) under ``root``/``cfg.ckpt_dir``.
+
+        The cursor pins everything a bit-exact mid-epoch resume needs:
+        the (epoch, batch) coordinate of the *next* batch, the global step,
+        the RNG seed, the padding high-water marks (jit signatures), the
+        device-sampler capacity table (device mode), and the telemetry
+        counters (as aux arrays). ``train_epoch`` calls this every
+        ``ckpt_every`` steps; it is also safe to call manually between
+        epochs.
+        """
+        root = root if root is not None else self.cfg.ckpt_dir
+        if not root:
+            raise ValueError("no checkpoint directory (cfg.ckpt_dir unset)")
+        cursor = {
+            "epoch": int(self._epoch if epoch is None else epoch),
+            "batch": int(next_batch),
+            "global_step": int(self.global_step),
+            "seed": int(self.cfg.seed),
+            "hwm": {k: int(v) for k, v in self._pad_hwm.items()},
+            "nonfinite_skips": int(self.nonfinite_skips),
+            "sampler": (
+                self.device_sampler.export_state()
+                if self.device_sampler is not None
+                else None
+            ),
+        }
+        aux = {}
+        if self.telemetry is not None:
+            c = self.telemetry.counters()
+            aux = {
+                "telemetry_k_v": c["k_v"],
+                "telemetry_k_e": c["k_e"],
+                "telemetry_num_batches": np.asarray(c["num_batches"]),
+            }
+        path = os.path.join(root, checkpoint_name(self.global_step))
+        _save_checkpoint(
+            path,
+            self.params,
+            self.global_step,
+            opt_state=self.opt_state,
+            cursor=cursor,
+            aux_arrays=aux,
+        )
+        self.obs.count("fault/checkpoints_written", 1)
+        return path
+
+    def resume(self, root: str | None = None):
+        """Restore the newest valid checkpoint under ``root``/``cfg.ckpt_dir``.
+
+        Rebuilds the exact mid-run state the cursor pinned — params,
+        optimizer state, epoch/batch position, HWM padding dict, sampler
+        caps, telemetry counters — so the continued trajectory is
+        bit-for-bit the uninterrupted one. Corrupt newest checkpoints are
+        skipped with a warning (previous-good fallback). Returns the loaded
+        ``Checkpoint``, or None when the directory holds no checkpoint at
+        all (fresh start).
+        """
+        root = root if root is not None else self.cfg.ckpt_dir
+        if not root:
+            raise ValueError("no checkpoint directory (cfg.ckpt_dir unset)")
+        ck = load_latest_checkpoint(root, self.params, self.opt_state)
+        if ck is None:
+            return None
+        cur = ck.cursor
+        if "seed" in cur and int(cur["seed"]) != self.cfg.seed:
+            log.warning(
+                "resuming with seed %d but checkpoint was written with seed "
+                "%d — the continued trajectory will NOT match the original",
+                self.cfg.seed, int(cur["seed"]),
+            )
+        self.params = ck.params
+        self.opt_state = ck.opt_state
+        self.global_step = int(cur.get("global_step", ck.step))
+        self._epoch = int(cur.get("epoch", 0))
+        self._start_iter = int(cur.get("batch", 0))
+        self.nonfinite_skips = int(cur.get("nonfinite_skips", 0))
+        self._pad_hwm.clear()
+        self._pad_hwm.update(
+            {k: int(v) for k, v in cur.get("hwm", {}).items()}
+        )
+        if self.device_sampler is not None and cur.get("sampler"):
+            self.device_sampler.load_state(cur["sampler"])
+        if self.telemetry is not None and "telemetry_k_v" in ck.aux:
+            self.telemetry.load_counters(
+                {
+                    "k_v": ck.aux["telemetry_k_v"],
+                    "k_e": ck.aux["telemetry_k_e"],
+                    "num_batches": int(ck.aux["telemetry_num_batches"]),
+                }
+            )
+        self.obs.count("fault/resumes", 1)
+        log.info(
+            "resumed from %s at step %d (epoch %d, batch %d)",
+            ck.path, self.global_step, self._epoch, self._start_iter,
+        )
+        return ck
 
     # ------------------------------------------------------------------ #
     def refine_partition(self, replication_budget: float | None = None):
@@ -1011,5 +1280,6 @@ class Trainer:
                 backend=self.cfg.sampler_backend,
                 interpret=self.cfg.sampler_interpret,
             )
+            self.device_sampler.obs = self.obs
             self.producer.device_sampler = self.device_sampler
         return self.partition

@@ -9,6 +9,7 @@ from pathlib import Path
 import pytest
 
 from repro.analysis import run_all
+from repro.analysis.faults import FaultSpec, check_faults
 from repro.analysis.findings import Baseline, Finding
 from repro.analysis.kernel_contract import KernelSpec, check_kernel_contract
 from repro.analysis.plan_lifecycle import (
@@ -425,6 +426,105 @@ def test_mesh_signature_delegates_to_plan_signature():
     from repro.runtime.signature import mesh_signature
 
     assert "plan_signature(" in inspect.getsource(mesh_signature)
+
+
+# --------------------------------------------------------------------- #
+# FT: fault handling
+# --------------------------------------------------------------------- #
+def test_ft001_swallowing_handlers_fire(tmp_path):
+    _write(
+        tmp_path, "pkg/worker.py",
+        """\
+        class Worker:
+            def poll(self):
+                try:
+                    step()
+                except Exception:
+                    return None
+
+        def drain():
+            try:
+                step()
+            except:
+                pass
+        """,
+    )
+    findings = check_faults(tmp_path, FaultSpec(subdirs=("pkg",)))
+    assert [f.rule for f in findings] == ["FT001", "FT001"]
+    assert "except Exception in Worker.poll" in findings[0].message
+    assert "bare except in drain" in findings[1].message
+    assert "retry_call" in findings[0].hint
+
+
+def test_ft001_compliant_handlers_are_clean(tmp_path):
+    _write(
+        tmp_path, "pkg/ok.py",
+        """\
+        def reraises():
+            try:
+                step()
+            except ValueError:
+                raise RuntimeError("wrapped")
+
+        def delivers(self):
+            try:
+                step()
+            except BaseException as e:
+                self.err = e  # captured for the consumer
+
+        def counts(self):
+            try:
+                step()
+            except OSError:
+                self.stats.failures += 1
+
+        def routes(self):
+            try:
+                step()
+            except KeyError:
+                obs.count("fault/misses", 1)
+
+        def logs(self):
+            try:
+                step()
+            except TimeoutError:
+                log.warning("timed out")
+
+        def exempted():
+            try:
+                step()
+            except Exception:  # FT001: feature probe, absence is the answer
+                return None
+        """,
+    )
+    assert check_faults(tmp_path, FaultSpec(subdirs=("pkg",))) == []
+
+
+def test_ft001_binding_without_reading_still_fires(tmp_path):
+    """``except E as e`` where the body never reads ``e`` is still a swallow."""
+    _write(
+        tmp_path, "pkg/bound.py",
+        """\
+        def f():
+            try:
+                step()
+            except ValueError as e:
+                return 0
+        """,
+    )
+    findings = check_faults(tmp_path, FaultSpec(subdirs=("pkg",)))
+    assert [f.rule for f in findings] == ["FT001"]
+    assert "except ValueError in f" in findings[0].message
+
+
+def test_ft001_covers_the_default_subtrees():
+    """The shipped spec points at runtime/ and faults/ — the packages the
+    robustness layer lives in. A rename must come back here."""
+    assert FaultSpec().subdirs == (
+        "src/repro/runtime", "src/repro/faults",
+    )
+    for sub in FaultSpec().subdirs:
+        assert (REPO / sub).is_dir(), sub
 
 
 # --------------------------------------------------------------------- #

@@ -1,0 +1,255 @@
+"""The fault-tolerance layer in isolation (repro.faults +
+repro.runtime.prefetch supervision, docs/ROBUSTNESS.md): retry policy,
+deterministic injection, watchdog diagnostics, crash respawn, leak
+accounting, and the trainer's non-finite guard."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.faults import (
+    FaultAction,
+    FaultInjector,
+    PipelineStallError,
+    RetryPolicy,
+    RetryableError,
+    WorkerCrash,
+    retry_call,
+)
+from repro.runtime import prefetch
+from repro.runtime.prefetch import OrderedPrefetcher
+
+
+# --------------------------------------------------------------------- #
+# RetryPolicy / retry_call
+# --------------------------------------------------------------------- #
+def test_backoff_schedule_is_exponential_and_capped():
+    p = RetryPolicy(retries=5, backoff_s=0.1, backoff_mult=2.0,
+                    max_backoff_s=0.35)
+    assert [p.delay_s(k) for k in (1, 2, 3, 4)] == [0.1, 0.2, 0.35, 0.35]
+
+
+def test_retry_call_recovers_within_budget():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise RetryableError("transient")
+        return "ok"
+
+    seen = []
+    out = retry_call(
+        flaky, RetryPolicy(retries=3, backoff_s=0.001),
+        on_retry=lambda a, e: seen.append((a, str(e))),
+    )
+    assert out == "ok" and len(calls) == 3
+    assert seen == [(1, "transient"), (2, "transient")]
+
+
+def test_retry_call_exhausted_budget_reraises():
+    def always():
+        raise RetryableError("still down")
+
+    with pytest.raises(RetryableError, match="still down"):
+        retry_call(always, RetryPolicy(retries=2, backoff_s=0.001))
+
+
+def test_retry_call_only_retries_declared_transients():
+    calls = []
+
+    def bug():
+        calls.append(1)
+        raise ValueError("programming error")
+
+    with pytest.raises(ValueError):
+        retry_call(bug, RetryPolicy(retries=5, backoff_s=0.001))
+    assert len(calls) == 1  # fail fast, no retry
+
+
+def test_retry_call_cancel_interrupts_backoff():
+    cancel = threading.Event()
+    cancel.set()
+
+    def always():
+        raise RetryableError("down")
+
+    t0 = time.perf_counter()
+    with pytest.raises(RetryableError):
+        retry_call(
+            always, RetryPolicy(retries=3, backoff_s=30.0), cancel=cancel
+        )
+    assert time.perf_counter() - t0 < 1.0  # did not sleep the 30s backoff
+
+
+# --------------------------------------------------------------------- #
+# FaultInjector: exact coordinates, exactly-times firing, poison copies
+# --------------------------------------------------------------------- #
+def test_injector_fires_exactly_times_and_records_order():
+    inj = FaultInjector(
+        schedule=[FaultAction("transient", epoch=0, batch=1, times=2)]
+    )
+    inj.fire("build", 0, 0)  # no match: no-op
+    for _ in range(2):
+        with pytest.raises(RetryableError):
+            inj.fire("build", 0, 1)
+    inj.fire("build", 0, 1)  # exhausted: quiet again
+    assert inj.fired == [("transient", "build", 0, 1)] * 2
+
+
+def test_injector_kind_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultAction("segfault")
+    with pytest.raises(ValueError, match="times"):
+        FaultAction("crash", times=0)
+
+
+def test_injector_delay_then_crash_ordering():
+    inj = FaultInjector(schedule=[
+        FaultAction("delay", epoch=0, batch=0, delay_s=0.05),
+        FaultAction("crash", epoch=0, batch=0),
+    ])
+    t0 = time.perf_counter()
+    with pytest.raises(WorkerCrash):
+        inj.fire("build", 0, 0)
+    assert time.perf_counter() - t0 >= 0.05
+    assert [k for k, *_ in inj.fired] == ["delay", "crash"]
+
+
+def test_poison_copies_and_targets_first_element():
+    inj = FaultInjector(schedule=[FaultAction("poison", epoch=0, batch=3)])
+    feats = np.ones((4, 5), dtype=np.float32)
+    out = inj.maybe_poison("build", 0, 3, feats)
+    assert np.isnan(out[0, 0]) and np.isfinite(out).sum() == 19
+    assert np.isfinite(feats).all()  # the source array is never mutated
+    same = inj.maybe_poison("build", 0, 3, feats)
+    assert same is feats  # exhausted: identity, no copy
+
+
+# --------------------------------------------------------------------- #
+# supervised OrderedPrefetcher
+# --------------------------------------------------------------------- #
+def test_prefetcher_retries_transient_builds_in_place():
+    inj = FaultInjector(
+        schedule=[FaultAction("transient", epoch=0, batch=2, times=2)]
+    )
+
+    def build(i):
+        inj.fire("build", 0, i)
+        return i * 10
+
+    pf = OrderedPrefetcher(
+        build, 5, depth=2, workers=2,
+        retry=RetryPolicy(retries=3, backoff_s=0.001),
+    )
+    assert list(pf) == [0, 10, 20, 30, 40]  # order preserved through retry
+    assert pf.stats.retries == 2 and pf.stats.worker_crashes == 0
+
+
+def test_prefetcher_retry_budget_exhausted_delivers_error_in_order():
+    def build(i):
+        if i == 1:
+            raise RetryableError("persistently down")
+        return i
+
+    pf = OrderedPrefetcher(
+        build, 3, depth=2, workers=1,
+        retry=RetryPolicy(retries=1, backoff_s=0.001),
+    )
+    it = iter(pf)
+    assert next(it) == 0
+    with pytest.raises(RetryableError, match="persistently down"):
+        next(it)
+    assert pf.stats.retries == 1
+
+
+def test_prefetcher_crash_respawns_and_recovers_the_batch():
+    inj = FaultInjector(schedule=[FaultAction("crash", epoch=0, batch=1)])
+
+    def build(i):
+        inj.fire("build", 0, i)
+        return i
+
+    pf = OrderedPrefetcher(build, 4, depth=2, workers=2)
+    assert list(pf) == [0, 1, 2, 3]  # the crashed index was requeued
+    assert pf.stats.worker_crashes == 1 and pf.stats.respawns == 1
+    assert pf.stats.leaked_threads == 0
+
+
+def test_prefetcher_watchdog_names_the_stuck_index():
+    release = threading.Event()
+
+    def build(i):
+        if i == 1:
+            release.wait(10.0)
+        return i
+
+    pf = OrderedPrefetcher(build, 3, depth=2, workers=1,
+                           stall_timeout_s=0.2)
+    it = iter(pf)
+    assert next(it) == 0
+    with pytest.raises(PipelineStallError) as ei:
+        next(it)
+    release.set()
+    e = ei.value
+    assert e.index == 1 and e.waited_s >= 0.2
+    assert "index 1" in str(e) and "live producer threads" in str(e)
+    assert e.live_threads  # the stuck worker is visible by name
+    pf.close()
+
+
+def test_prefetcher_close_accounts_leaked_threads(monkeypatch):
+    release = threading.Event()
+
+    def build(i):
+        release.wait(10.0)
+        return i
+
+    monkeypatch.setattr(prefetch, "_JOIN_TIMEOUT_S", 0.1)
+    pf = OrderedPrefetcher(build, 2, depth=2, workers=2)
+    time.sleep(0.05)  # let workers park inside the slow build
+    pf.close()
+    assert pf.stats.leaked_threads >= 1
+    assert pf.stats.as_dict()["leaked_threads"] == pf.stats.leaked_threads
+    release.set()
+
+
+def test_prefetcher_stats_surface_recovery_counters():
+    pf = OrderedPrefetcher(lambda i: i, 2, depth=1, workers=1)
+    list(pf)
+    d = pf.stats.as_dict()
+    for key in ("retries", "worker_crashes", "respawns", "leaked_threads"):
+        assert d[key] == 0
+
+
+# --------------------------------------------------------------------- #
+# the trainer's non-finite guard (end-to-end with a poisoned batch)
+# --------------------------------------------------------------------- #
+def test_skip_nonfinite_freezes_params_on_poisoned_batch():
+    import jax
+
+    from repro.graph.datasets import make_dataset
+    from repro.models.gnn import GNNSpec
+    from repro.train.trainer import TrainConfig, Trainer
+
+    ds = make_dataset("tiny")
+    spec = GNNSpec(
+        model="sage", in_dim=ds.spec.feat_dim, hidden_dim=16,
+        out_dim=ds.spec.num_classes, num_layers=2, num_heads=4,
+    )
+    cfg = TrainConfig(
+        mode="split", num_devices=2, fanouts=(4, 4), batch_size=16,
+        presample_epochs=1, skip_nonfinite=True,
+    )
+    inj = FaultInjector(schedule=[FaultAction("poison", epoch=0, batch=1)])
+    tr = Trainer(ds, spec, cfg, injector=inj)
+    st = tr.train_epoch()
+    assert tr.nonfinite_skips == 1
+    assert not np.isfinite(st.iters[1].loss)  # the skip reports the NaN
+    # the guard kept the poison out of the weights: training stayed sane
+    for leaf in jax.tree_util.tree_leaves(tr.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    for leaf in jax.tree_util.tree_leaves(tr.opt_state):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert np.isfinite(st.iters[-1].loss)

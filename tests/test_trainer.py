@@ -96,13 +96,20 @@ def test_checkpoint_roundtrip(tmp_path, ds):
                    out_dim=4, num_layers=1)
     tr = Trainer(ds, spec, cfg)
     tr.train_epoch(max_iters=1)
-    save_checkpoint(str(tmp_path / "ck"), tr.params, step=7)
-    restored, step = load_checkpoint(str(tmp_path / "ck"), tr.params)
-    assert step == 7
+    save_checkpoint(
+        str(tmp_path / "ck"), tr.params, step=7, opt_state=tr.opt_state
+    )
+    ck = load_checkpoint(str(tmp_path / "ck"), tr.params, tr.opt_state)
+    assert ck.step == 7
     import jax
 
     for a, b in zip(
-        jax.tree_util.tree_leaves(tr.params), jax.tree_util.tree_leaves(restored)
+        jax.tree_util.tree_leaves(tr.params), jax.tree_util.tree_leaves(ck.params)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(
+        jax.tree_util.tree_leaves(tr.opt_state),
+        jax.tree_util.tree_leaves(ck.opt_state),
     ):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
